@@ -1,0 +1,53 @@
+"""Kernel microbench: interpret-mode Pallas vs jnp-reference wall time on
+CPU (structural check only — real perf numbers come from the roofline
+analysis; interpret mode executes the kernel body in Python)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)                      # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.time() - t0) / reps
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    B, S, H, KV, D = 1, 256, 4, 2, 64
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(key, (B, S, KV, D))
+    v = jax.random.normal(key, (B, S, KV, D))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    G = H // KV
+    qr = q.reshape(B, S, KV, G, D).transpose(0, 2, 3, 1, 4).reshape(B * KV, G, S, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
+    pr = jnp.repeat(pos, KV, axis=0)
+    t_ref = _time(ref.flash_attention_ref, qr, kr, vr, pr, pr)
+    rows.append(("kernels.flash_attention.jnp_ref", round(t_ref * 1e6, 1),
+                 f"S={S};H={H};D={D}"))
+    if not quick:
+        t_pal = _time(ops.flash_attention, q, k, v, pos, pos, interpret=True,
+                      block_q=128, block_kv=128)
+        rows.append(("kernels.flash_attention.pallas_interpret",
+                     round(t_pal * 1e6, 1), "interpret-mode (CPU python loop)"))
+
+    logits = jax.random.normal(key, (8, 50304))
+    mask = jax.random.uniform(key, (8, 50304)) > 0.5
+    t_ref = _time(ref.constrained_sample_ref, logits, mask,
+                  jnp.zeros_like(logits))
+    rows.append(("kernels.constrained_sample.jnp_ref", round(t_ref * 1e6, 1),
+                 "B=8;V=50304"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

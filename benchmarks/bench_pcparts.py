@@ -1,0 +1,116 @@
+"""Table 5: PCParts (D1) Q1–Q5 across system emulations.
+
+Q1 π^s table inference · Q2 ρ^s generation · Q3 π^s scalar ·
+Q4 σ^s semantic select · Q5 ⋈^s semantic join.
+"""
+from __future__ import annotations
+
+from benchmarks.datasets import make_pcparts
+from benchmarks.systems import (SYSTEMS, RefusalAbort, accuracy_f1, f1_score,
+                                make_db)
+
+Q1 = ("SELECT name, vendor, socket FROM LLM m (PROMPT 'extract the "
+      "{vendor VARCHAR} and {socket VARCHAR} from the {{description}}', "
+      "Product)")
+Q2 = ("SELECT tier, watts FROM LLM m (PROMPT 'list the standard PSU tiers "
+      "{tier VARCHAR} and {watts INTEGER}')")
+Q3 = ("SELECT name, LLM m (PROMPT 'get the {vendor VARCHAR} from "
+      "{{description}}') AS vendor FROM Product")
+Q4 = ("SELECT review FROM Product AS p NATURAL JOIN Review AS r WHERE "
+      "LLM m (PROMPT 'is the sentiment of {{review}} {negative BOOLEAN}') "
+      "= TRUE AND category = 'CPU'")
+Q5 = ("SELECT c.name AS cpu, m.name AS mobo FROM Product AS c JOIN "
+      "Product AS m ON "
+      "LLM m (PROMPT 'is CPU {{c.description}} {compatible BOOLEAN} with "
+      "motherboard {{m.description}}') WHERE c.category = 'CPU' AND "
+      "m.category = 'Motherboard'")
+
+QUERIES = {"Q1_project_table": (Q1, "table_inference"),
+           "Q2_generate": (Q2, "generate"),
+           "Q3_project_scalar": (Q3, "project"),
+           "Q4_select": (Q4, "select"),
+           "Q5_join": (Q5, "join")}
+
+
+def _score(qname, res, gt, tables):
+    if res is None:
+        return 0.0
+    t = res.table
+    if qname == "Q1_project_table":
+        gold = {p["name"]: (p["vendor_gt"], p["socket_gt"])
+                for p in gt["products"]}
+        pred = [(r["vendor"], r["socket"]) for r in t.rows()]
+        gold_l = [gold[r["name"]] for r in t.rows()]
+        return accuracy_f1([p[0] for p in pred], [g[0] for g in gold_l])
+    if qname == "Q2_generate":
+        return 1.0 if len(t) == 4 else max(0.0, 1 - abs(len(t) - 4) / 4)
+    if qname == "Q3_project_scalar":
+        gold = {p["name"]: p["vendor_gt"] for p in gt["products"]}
+        return accuracy_f1([r["vendor"] for r in t.rows()],
+                           [gold[r["name"]] for r in t.rows()])
+    if qname == "Q4_select":
+        cpu_pids = {p["pid"] for p in gt["products"]
+                    if p["category"] == "CPU"}
+        gold_reviews = {r["review"] for r in gt["reviews"]
+                        if r["negative_gt"] and r["pid"] in cpu_pids}
+        got = set(t.column("review"))
+        tp = len(got & gold_reviews)
+        if tp == 0:
+            return 0.0
+        prec = tp / max(1, len(got))
+        rec = tp / max(1, len(gold_reviews))
+        return 2 * prec * rec / (prec + rec)
+    if qname == "Q5_join":
+        byname = {p["name"]: p for p in gt["products"]}
+        gold_pairs = set()
+        for c in gt["products"]:
+            if c["category"] != "CPU":
+                continue
+            for m in gt["products"]:
+                if m["category"] == "Motherboard" and \
+                        c["socket_gt"] == m["socket_gt"]:
+                    gold_pairs.add((c["name"], m["name"]))
+        cols = t.column_names
+        got = set(zip(t.column(cols[0]), t.column(cols[1])))
+        tp = len(got & gold_pairs)
+        if tp == 0:
+            return 0.0
+        prec, rec = tp / max(1, len(got)), tp / max(1, len(gold_pairs))
+        return 2 * prec * rec / (prec + rec)
+    return 0.0
+
+
+def run(quick: bool = False):
+    tables, oracle, gt = make_pcparts(
+        n_products=60 if quick else 220, n_reviews=200 if quick else 950)
+    rows = []
+    systems = ["LOTUS", "EvaDB", "Flock", "iPDB"]
+    for qname, (q, kind) in QUERIES.items():
+        if quick and qname == "Q5_join":
+            continue
+        for sysname in systems:
+            spec = SYSTEMS[sysname]
+            if kind not in spec.supports:
+                rows.append((f"pcparts.{qname}.{sysname}", None,
+                             "status=N/A"))
+                continue
+            db = make_db(sysname, tables, oracle, refusal_rate=0.0)
+            try:
+                res = db.sql(q)
+            except RefusalAbort:
+                rows.append((f"pcparts.{qname}.{sysname}", None,
+                             "status=Exception"))
+                continue
+            f1 = _score(qname, res, gt, tables)
+            s = res.stats
+            per_call = (s.sim_latency_s / max(1, s.llm_calls)) * 1e6
+            rows.append((
+                f"pcparts.{qname}.{sysname}", round(per_call, 1),
+                f"latency_s={s.sim_latency_s:.2f};calls={s.llm_calls};"
+                f"tokens={s.tokens};f1={f1:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

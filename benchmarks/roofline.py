@@ -1,0 +1,91 @@
+"""Roofline table from the dry-run artifacts (§Roofline deliverable).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun), emits the
+per-(arch × shape) three-term table, the dominant bottleneck, the
+MODEL_FLOPS/HLO_FLOPs useful ratio, and an ANALYTIC HBM lower bound
+(params + activations + cache traffic) for context — the measured
+HLO-bytes term counts every unfused operand/result access and therefore
+upper-bounds real traffic (see EXPERIMENTS.md §Methodology).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Optional
+
+import repro.configs as C
+from repro.models.config import SHAPES_BY_NAME
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+CHIPS = 256
+
+
+def analytic_hbm_bytes(arch: str, shape_name: str, num_micro: int = 4) -> float:
+    """Per-device HBM lower bound: weights touched per step + residual-
+    stream activations + KV/state cache traffic."""
+    cfg = C.get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    n_params = cfg.param_count(padded=True)
+    if shape.kind == "train":
+        # fwd read + bwd read + grad write (bf16 compute copies) per
+        # microbatch + Adam update (3 reads + 3 writes fp32) once
+        w = n_params * (2 * 3 * num_micro + 6 * 4) / CHIPS
+        tokens = shape.global_batch * shape.seq_len
+        acts = tokens * cfg.d_model * 2 * 2 * 8 * cfg.num_layers / CHIPS
+        return w + acts
+    if shape.kind == "prefill":
+        w = n_params * 2 / CHIPS
+        tokens = shape.global_batch * shape.seq_len
+        acts = tokens * cfg.d_model * 2 * 2 * 4 * cfg.num_layers / CHIPS
+        return w + acts
+    # decode: weights once + cache read/write
+    w = n_params * 2 / CHIPS
+    lc = min(shape.seq_len, cfg.sliding_window) if cfg.sliding_window \
+        else shape.seq_len
+    cache = 0.0
+    if cfg.has_attention:
+        cache = (cfg.num_layers * shape.global_batch * lc *
+                 cfg.num_kv_heads * cfg.head_dim * 2 * 2) / CHIPS
+    if cfg.has_ssm:
+        cache += (cfg.num_layers * shape.global_batch * cfg.d_inner *
+                  (cfg.ssm_state + cfg.ssm_conv) * 4 * 2) / CHIPS
+    return w + cache
+
+
+def load_cells(dry_dir: str = "results/dryrun"):
+    out = {}
+    for p in Path(dry_dir).glob("*__single.json"):
+        d = json.loads(p.read_text())
+        if d.get("ok") and not d.get("skipped"):
+            out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def run(quick: bool = False, dry_dir: str = "results/dryrun"):
+    rows = []
+    cells = load_cells(dry_dir)
+    for (arch, shape), d in sorted(cells.items()):
+        rf = d["roofline"]
+        dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / dom if dom else 0.0
+        ana = analytic_hbm_bytes(arch, shape)
+        rows.append((
+            f"roofline.{arch}.{shape}",
+            round(dom * 1e6, 1),
+            f"bound={rf['bound']};compute_s={rf['compute_s']:.4f};"
+            f"memory_s={rf['memory_s']:.4f};"
+            f"collective_s={rf['collective_s']:.4f};"
+            f"useful_ratio={rf['useful_flops_ratio']:.3f};"
+            f"compute_fraction={frac:.3f};"
+            f"analytic_hbm_s={ana / HBM:.4f}"))
+    if not rows:
+        rows.append(("roofline.missing", None,
+                     "run: python -m repro.launch.dryrun --all"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,51 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Set IPDB_BENCH_QUICK=1 for the
+reduced-size pass (used by CI/test_output runs); the full pass reproduces
+the paper-scale ratios.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("pcparts_T5", "benchmarks.bench_pcparts"),
+    ("foodreviews_T6", "benchmarks.bench_foodreviews"),
+    ("semanticmovies_T7", "benchmarks.bench_semanticmovies"),
+    ("biodex_T8", "benchmarks.bench_biodex"),
+    ("intraop_F3", "benchmarks.bench_intraop"),
+    ("batchsize_F4", "benchmarks.bench_batchsize"),
+    ("marshal_parallel_F5", "benchmarks.bench_marshal_parallel"),
+    ("pullup_F6", "benchmarks.bench_pullup"),
+    ("join_ordering_F7", "benchmarks.bench_join_ordering"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    import importlib
+    quick = os.environ.get("IPDB_BENCH_QUICK", "0") == "1"
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, modname in MODULES:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            rows = mod.run(quick=quick)
+            for name, us, derived in rows:
+                print(f"{name},{us},{derived}", flush=True)
+            print(f"# {label} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{label}.ERROR,,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

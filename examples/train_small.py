@@ -1,0 +1,36 @@
+"""Train a ~100M-parameter model for a few hundred steps (CPU-scaled by
+default; pass --full-100m on real hardware).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+
+This drives repro.launch.train (checkpointing, preemption handling,
+straggler detection included).
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.launch.train import main as train_main
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full-100m", action="store_true",
+                    help="olmo-1b geometry at 8 layers (~100M class); "
+                    "CPU default uses the smoke config")
+    ap.add_argument("--ckpt-dir", default="/tmp/ipdb_train_small")
+    args = ap.parse_args()
+
+    argv = ["--arch", "olmo-1b", "--steps", str(args.steps),
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+            "--batch", "8", "--seq-len", "128", "--lr", "3e-3"]
+    if not args.full_100m:
+        argv.append("--smoke")
+    return train_main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

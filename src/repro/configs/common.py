@@ -1,0 +1,88 @@
+"""Shared input-spec construction for every (arch × shape) cell.
+
+`input_specs` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, and allocation-free — which is what the
+dry-run lowers against. The same dict keys are produced (as real arrays)
+by the training data pipeline and the serving engine.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as MDL
+from repro.models.config import ENCODER, VLM, ModelConfig, ShapeSpec
+
+S = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Batch for one train_step: token LM (or frame-classification for the
+    encoder, prefix-LM for the VLM)."""
+    if cfg.family == ENCODER:
+        return {
+            "embeds": S((batch, seq, cfg.d_model), jnp.bfloat16),
+            "positions": S((batch, seq), jnp.int32),
+            "labels": S((batch, seq), jnp.int32),
+            "mask": S((batch, seq), jnp.float32),
+        }
+    if cfg.family == VLM:
+        p = cfg.num_prefix_tokens
+        text = seq - p
+        return {
+            "tokens": S((batch, text), jnp.int32),
+            "prefix_embeds": S((batch, p, cfg.d_model), jnp.bfloat16),
+            "positions": S((batch, text), jnp.int32),
+            # labels cover the full (prefix + text) logits row; loss mask
+            # zeroes the prefix positions
+            "labels": S((batch, seq), jnp.int32),
+            "mask": S((batch, seq), jnp.float32),
+        }
+    return {
+        "tokens": S((batch, seq), jnp.int32),
+        "positions": S((batch, seq), jnp.int32),
+        "labels": S((batch, seq), jnp.int32),
+        "mask": S((batch, seq), jnp.float32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    if cfg.family == ENCODER:
+        return {
+            "embeds": S((batch, seq, cfg.d_model), jnp.bfloat16),
+            "positions": S((batch, seq), jnp.int32),
+        }
+    if cfg.family == VLM:
+        p = cfg.num_prefix_tokens
+        return {
+            "tokens": S((batch, seq - p), jnp.int32),
+            "prefix_embeds": S((batch, p, cfg.d_model), jnp.bfloat16),
+            "positions": S((batch, seq - p), jnp.int32),
+        }
+    return {
+        "tokens": S((batch, seq), jnp.int32),
+        "positions": S((batch, seq), jnp.int32),
+    }
+
+
+def decode_batch_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    return {
+        "tokens": S((batch, 1), jnp.int32),
+        "positions": S((batch, 1), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """All jit inputs for the given cell, EXCLUDING params/opt-state (those
+    come from `model.param_specs` / the train-state builder)."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape.global_batch, shape.seq_len)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape.global_batch, shape.seq_len)}
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "batch": decode_batch_specs(cfg, shape.global_batch),
+        "cache": MDL.cache_specs(cfg, shape.global_batch, shape.seq_len),
+    }

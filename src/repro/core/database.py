@@ -1,0 +1,144 @@
+"""iPDB — the public database API.
+
+    db = IPDB()
+    db.register_table("Product", table)
+    db.sql("CREATE LLM MODEL o4mini PATH 'oracle:pcparts' ON PROMPT API '...'")
+    out = db.sql("SELECT name FROM Product WHERE LLM o4mini (PROMPT '...')")
+
+Executor resolution by model PATH scheme:
+    oracle:<name>   → OracleExecutor using a registered oracle fn
+    jax:<arch>      → JaxExecutor on an in-process InferenceEngine
+                      (smoke-size config of the named architecture)
+    *.onnx / tabular:<name> → TabularExecutor via a registered predict fn
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core.executors import (JaxExecutor, OracleExecutor, Predictor,
+                                  TabularExecutor)
+from repro.core.optimizer import DEFAULT_FLAGS, Optimizer
+from repro.core.predict import PredictOperator
+from repro.relational.binder import Binder
+from repro.relational.catalog import Catalog, ModelEntry
+from repro.relational.executor import ExecStats, PlanExecutor
+from repro.relational.parser import (CreateModel, CreateTableAs, SelectStmt,
+                                     SetStmt, parse_sql)
+from repro.relational.plan import Node, PredictInfo, plan_repr
+from repro.relational.table import Table
+
+
+@dataclasses.dataclass
+class QueryResult:
+    table: Optional[Table]
+    stats: ExecStats
+    plan: Optional[str] = None
+
+
+class IPDB:
+    def __init__(self, *, session_options: Optional[Dict[str, object]] = None):
+        self.catalog = Catalog()
+        self.options: Dict[str, object] = {
+            "batch_size": 16, "n_threads": 16, "use_batching": True,
+            "use_dedup": True, "rate_limit_rpm": 0.0,
+            **DEFAULT_FLAGS,
+        }
+        if session_options:
+            self.options.update(session_options)
+        self._oracles: Dict[str, Callable] = {}
+        self._tabular_fns: Dict[str, Callable] = {}
+        self._jax_engines: Dict[str, object] = {}
+        self._oracle_kwargs: Dict[str, dict] = {}
+        self.last_stats: Optional[ExecStats] = None
+
+    # -- registration ---------------------------------------------------
+    def register_table(self, name: str, t: Table) -> None:
+        self.catalog.register_table(name, t)
+
+    def register_oracle(self, name: str, fn: Callable, **kwargs) -> None:
+        """Oracle executors for accuracy-bearing benchmarks:
+        fn(instruction, rows) -> list of output dicts."""
+        self._oracles[name] = fn
+        self._oracle_kwargs[name] = kwargs
+
+    def register_tabular(self, name: str, fn: Callable) -> None:
+        self._tabular_fns[name] = fn
+
+    def set_option(self, key: str, value) -> None:
+        self.options[key] = value
+
+    # -- executor resolution ---------------------------------------------
+    def _make_executor(self, entry: ModelEntry) -> Predictor:
+        path = entry.path
+        if path.startswith("oracle:"):
+            name = path.split(":", 1)[1]
+            if name not in self._oracles:
+                raise KeyError(f"oracle {name!r} not registered")
+            return OracleExecutor(self._oracles[name],
+                                  **self._oracle_kwargs.get(name, {}))
+        if path.startswith("jax:"):
+            arch = path.split(":", 1)[1]
+            if arch not in self._jax_engines:
+                import repro.configs as C
+                from repro.serving.engine import InferenceEngine
+                cfg = C.get_smoke_config(arch).replace(vocab_size=259)
+                self._jax_engines[arch] = InferenceEngine(
+                    cfg, max_len=int(entry.options.get("max_len", 512)))
+            return JaxExecutor(self._jax_engines[arch])
+        if path.endswith(".onnx") or path.startswith("tabular:"):
+            name = path.split(":", 1)[1] if ":" in path else entry.name
+            if name not in self._tabular_fns:
+                raise KeyError(f"tabular model fn {name!r} not registered")
+            return TabularExecutor(self._tabular_fns[name])
+        raise ValueError(f"cannot resolve executor for PATH {path!r}")
+
+    def _predict_factory(self, info: PredictInfo) -> PredictOperator:
+        entry = self.catalog.model(info.model_name)
+        # catalog metadata flows into the operator (API url, secret, options)
+        merged = dict(info.options or {})
+        merged.setdefault("base_api", entry.base_api)
+        info = dataclasses.replace(info, options=merged)
+        return PredictOperator(info, self._make_executor(entry), self.options)
+
+    # -- entry point -------------------------------------------------------
+    def sql(self, query: str, *, explain: bool = False) -> QueryResult:
+        stmt = parse_sql(query)
+        if isinstance(stmt, SetStmt):
+            self.options[stmt.key] = stmt.value
+            return QueryResult(None, ExecStats())
+        if isinstance(stmt, CreateModel):
+            self.catalog.register_model(ModelEntry(
+                name=stmt.name, path=stmt.path, type=stmt.model_type,
+                on_prompt=stmt.on_prompt, base_api=stmt.api,
+                relation=stmt.relation, input_set=stmt.features,
+                output_set=stmt.output, options=stmt.options))
+            return QueryResult(None, ExecStats())
+        if isinstance(stmt, CreateTableAs):
+            res = self._run_select(stmt.select, explain)
+            self.catalog.register_table(stmt.name, res.table)
+            return res
+        if isinstance(stmt, SelectStmt):
+            return self._run_select(stmt, explain)
+        raise TypeError(type(stmt))
+
+    def explain(self, query: str) -> str:
+        stmt = parse_sql(query)
+        assert isinstance(stmt, SelectStmt)
+        plan = Binder(self.catalog, self.options).bind_select(stmt)
+        opt = Optimizer(self.catalog, self.options).optimize(plan)
+        return ("-- logical --\n" + plan_repr(plan)
+                + "\n-- optimized --\n" + plan_repr(opt))
+
+    def _run_select(self, stmt: SelectStmt, explain: bool) -> QueryResult:
+        t0 = time.time()
+        plan = Binder(self.catalog, self.options).bind_select(stmt)
+        plan = Optimizer(self.catalog, self.options).optimize(plan)
+        ex = PlanExecutor(self.catalog, self._predict_factory,
+                          chunk_size=int(self.options.get("chunk_size", 2048)))
+        table = ex.run(plan)
+        ex.stats.wall_s = time.time() - t0
+        self.last_stats = ex.stats
+        return QueryResult(table, ex.stats,
+                           plan_repr(plan) if explain else None)

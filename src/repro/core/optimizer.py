@@ -1,0 +1,317 @@
+"""Semantic query optimizer (paper §6.4–§6.6 + §7.10 guidance).
+
+Rules (each individually switchable for the ablation benchmarks):
+
+  pullup      (§6.4) — predict pull-up, implemented as its dual: cheap
+                (zero-cost) predicates are pushed BELOW Predict nodes, so
+                expensive inference runs after traditional filtering. The
+                engine's guardrail "inference is not zero-cost" is
+                structural: no rule ever moves a Predict downward.
+  join_order  (§6.5) — semantic select vs join ordering: a semantic select
+                above a join is pushed to its input side only when the
+                side's distinct input count is LOWER than the deduplicated
+                distinct count seen above the join (cost-aware, using real
+                distinct-value statistics collected from the cheap
+                relational prefix of the plan).
+  merge       (§6.6) — adjacent Predict nodes with the same model over the
+                same child are fused into one multi-output call.
+  order       (§7.10) — stacks of semantic selects are ordered by input
+                size, then selectivity estimate, then quality hint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.relational.catalog import Catalog
+from repro.relational.expr import (BinOp, Col, Expr, PredictExpr,
+                                   PromptTemplate, find_predicts)
+from repro.relational.plan import (Filter, GroupBy, Join, Limit, Node,
+                                   OrderBy, Predict, PredictInfo, Project,
+                                   Scan, SemanticJoin)
+
+DEFAULT_FLAGS = {
+    "enable_pullup": True,
+    "enable_join_order": True,
+    "enable_merge": True,
+    "enable_select_order": True,
+}
+
+
+def _is_cheap(e: Expr) -> bool:
+    return not find_predicts(e)
+
+
+def _split_and(e: Expr) -> List[Expr]:
+    if isinstance(e, BinOp) and e.op == "AND":
+        return _split_and(e.left) + _split_and(e.right)
+    return [e]
+
+
+def _and_all(es: List[Expr]) -> Optional[Expr]:
+    out = None
+    for e in es:
+        out = e if out is None else BinOp("AND", out, e)
+    return out
+
+
+def _cols_of(e: Expr) -> set:
+    return set(e.columns()) | {
+        p.resolved_col for p in find_predicts(e) if p.resolved_col}
+
+
+class Optimizer:
+    def __init__(self, catalog: Catalog, flags: Dict[str, bool] = None):
+        self.cat = catalog
+        self.flags = dict(DEFAULT_FLAGS)
+        if flags:
+            self.flags.update({k: v for k, v in flags.items()
+                               if k in DEFAULT_FLAGS})
+
+    # ------------------------------------------------------------------
+    def optimize(self, plan: Node) -> Node:
+        plan = self._split_filters(plan)
+        if self.flags["enable_merge"]:
+            # outputs referenced by Filters = selective predicts; merging two
+            # highly selective semantic selects hurts (paper §6.6 caveat)
+            self._filter_used = set()
+            for x in _walk(plan):
+                if isinstance(x, Filter):
+                    self._filter_used |= _cols_of(x.predicate)
+            plan = self._merge_predicts(plan)
+        if self.flags["enable_pullup"]:
+            for _ in range(8):                    # to fixpoint (bounded)
+                new = self._pushdown_cheap(plan)
+                if new is plan:
+                    break
+                plan = new
+        if self.flags["enable_join_order"]:
+            plan = self._semantic_select_vs_join(plan)
+        if self.flags["enable_select_order"]:
+            plan = self._order_semantic_selects(plan)
+        return plan
+
+    # -- helpers --------------------------------------------------------
+    def _map_children(self, n: Node, fn) -> Node:
+        if isinstance(n, Filter):
+            return Filter(fn(n.child), n.predicate, n.selectivity)
+        if isinstance(n, Project):
+            return Project(fn(n.child), n.exprs)
+        if isinstance(n, Join):
+            return Join(fn(n.left), fn(n.right), n.kind, n.left_keys,
+                        n.right_keys, n.extra)
+        if isinstance(n, GroupBy):
+            g = GroupBy(fn(n.child), n.keys, n.aggs)
+            g.llm_agg_infos = getattr(n, "llm_agg_infos", {})
+            return g
+        if isinstance(n, OrderBy):
+            return OrderBy(fn(n.child), n.keys)
+        if isinstance(n, Limit):
+            return Limit(fn(n.child), n.n)
+        if isinstance(n, Predict):
+            return Predict(fn(n.child) if n.child else None, n.info)
+        if isinstance(n, SemanticJoin):
+            return SemanticJoin(fn(n.left), fn(n.right), n.info)
+        return n
+
+    # -- rule: split conjunctive filters ---------------------------------
+    def _split_filters(self, n: Node) -> Node:
+        n = self._map_children(n, self._split_filters)
+        if isinstance(n, Filter):
+            parts = _split_and(n.predicate)
+            if len(parts) > 1:
+                child = n.child
+                # cheap parts innermost so they can keep sinking
+                for p in sorted(parts, key=lambda e: 0 if _is_cheap(e) else 1,
+                                reverse=True):
+                    child = Filter(child, p)
+                return child
+        return n
+
+    # -- rule: cheap predicate pushdown (= predict pull-up, §6.4) ---------
+    def _pushdown_cheap(self, n: Node) -> Node:
+        n2 = self._map_children(n, self._pushdown_cheap)
+        n = n2
+        if not isinstance(n, Filter):
+            return n
+        cols = _cols_of(n.predicate)
+        c = n.child
+        # ANY filter (cheap or semantic) sinks below a Predict it doesn't
+        # depend on — this both realizes predict pull-up (§6.4) and forms
+        # the interleaved Filter(Predict(...)) units that §7.10 reorders
+        if isinstance(c, Predict) and c.child is not None and \
+                not (cols & set(c.info.out_cols)):
+            return self._pushdown_cheap(
+                Predict(Filter(c.child, n.predicate), c.info))
+        if not _is_cheap(n.predicate):
+            return n
+        # below the matching side of a Join
+        if isinstance(c, Join):
+            lsch = set(c.left.schema(self.cat))
+            rsch = set(c.right.schema(self.cat))
+            if cols <= lsch:
+                return Join(Filter(c.left, n.predicate), c.right, c.kind,
+                            c.left_keys, c.right_keys, c.extra)
+            if cols <= rsch:
+                return Join(c.left, Filter(c.right, n.predicate), c.kind,
+                            c.left_keys, c.right_keys, c.extra)
+        # below a SemanticJoin side
+        if isinstance(c, SemanticJoin):
+            lsch = set(c.left.schema(self.cat))
+            rsch = set(c.right.schema(self.cat))
+            if cols <= lsch:
+                return SemanticJoin(Filter(c.left, n.predicate), c.right,
+                                    c.info)
+            if cols <= rsch:
+                return SemanticJoin(c.left, Filter(c.right, n.predicate),
+                                    c.info)
+        # through another (cheap or semantic) Filter: reorder cheap-first
+        if isinstance(c, Filter) and not _is_cheap(c.predicate):
+            return Filter(Filter(c.child, n.predicate), c.predicate,
+                          c.selectivity)
+        return n
+
+    # -- rule: predicate merging (§6.6) -----------------------------------
+    def _merge_predicts(self, n: Node) -> Node:
+        n = self._map_children(n, self._merge_predicts)
+        if isinstance(n, Predict) and isinstance(n.child, Predict):
+            a, b = n.info, n.child.info
+            a_sel = bool(set(a.out_cols) & getattr(self, "_filter_used", set()))
+            b_sel = bool(set(b.out_cols) & getattr(self, "_filter_used", set()))
+            if (a.model_name == b.model_name and not a.agg and not b.agg
+                    and a.prompt is not None and b.prompt is not None
+                    and n.child.child is not None
+                    and not (a_sel and b_sel)):
+                merged_prompt = PromptTemplate(
+                    raw=b.prompt.raw + " ; " + a.prompt.raw,
+                    instruction=b.prompt.instruction + " AND ALSO: "
+                    + a.prompt.instruction,
+                    inputs=list(dict.fromkeys(b.prompt.inputs + a.prompt.inputs)),
+                    outputs=b.prompt.outputs + a.prompt.outputs)
+                info = PredictInfo(
+                    model_name=a.model_name, prompt=merged_prompt,
+                    inputs=list(dict.fromkeys(b.inputs + a.inputs)),
+                    outputs=b.outputs + a.outputs,
+                    options={**b.options, **a.options},
+                    out_cols_override=b.out_cols + a.out_cols)
+                return Predict(n.child.child, info)
+        return n
+
+    # -- rule: semantic select vs join ordering (§6.5) ---------------------
+    def _distinct_count(self, plan: Node, cols: List[str]) -> Optional[float]:
+        """Real distinct-value statistics when the subplan is cheap-only."""
+        for x in _walk(plan):
+            if isinstance(x, (Predict, SemanticJoin)):
+                return None
+            if isinstance(x, Filter) and not _is_cheap(x.predicate):
+                return None
+        try:
+            from repro.relational.executor import PlanExecutor
+            ex = PlanExecutor(self.cat, predict_factory=None)
+            t = ex.run(plan)
+            if len(t) == 0:
+                return 0.0
+            vals = set()
+            arrs = [t.column(c) for c in cols if c in t.cols]
+            if not arrs:
+                return None
+            for i in range(len(t)):
+                vals.add(tuple(a[i] for a in arrs))
+            return float(len(vals))
+        except Exception:
+            return None
+
+    def _semantic_select_vs_join(self, n: Node) -> Node:
+        n = self._map_children(n, self._semantic_select_vs_join)
+        # pattern: Filter_sem(Predict(Join(A, B))) with inputs from one side
+        if (isinstance(n, Filter) and not _is_cheap(n.predicate)
+                and isinstance(n.child, Predict)
+                and n.child.child is not None
+                and isinstance(n.child.child, Join)):
+            pred_node = n.child
+            join = pred_node.child
+            inputs = set(pred_node.info.inputs)
+            lsch = set(join.left.schema(self.cat))
+            rsch = set(join.right.schema(self.cat))
+            side = "left" if inputs <= lsch else \
+                "right" if inputs <= rsch else None
+            if side:
+                side_plan = join.left if side == "left" else join.right
+                d_side = self._distinct_count(side_plan, list(inputs))
+                d_join = self._distinct_count(join, list(inputs))
+                if d_side is not None and d_join is not None \
+                        and d_side < d_join:
+                    # push: fewer distinct inputs below the join (dedup makes
+                    # the above-join placement cost d_join calls)
+                    sub = Filter(Predict(side_plan, pred_node.info),
+                                 n.predicate, n.selectivity)
+                    if side == "left":
+                        return Join(sub, join.right, join.kind,
+                                    join.left_keys, join.right_keys,
+                                    join.extra)
+                    return Join(join.left, sub, join.kind, join.left_keys,
+                                join.right_keys, join.extra)
+        return n
+
+    # -- rule: semantic select ordering (§7.10) ----------------------------
+    def _sem_unit_cost(self, f: Filter) -> Tuple[float, float]:
+        """(avg input tokens estimate, selectivity hint) of one semantic
+        select unit Filter(Predict(...))."""
+        p = f.child
+        assert isinstance(p, Predict)
+        instr = len(p.info.prompt.raw) if p.info.prompt else 64
+        sizes = []
+        for c in p.info.inputs:
+            base = _find_base_column(p.child, c, self.cat)
+            if base is not None:
+                vals = base[:256]
+                sizes.append(float(np.mean([len(str(v)) for v in vals]))
+                             if len(vals) else 8.0)
+            else:
+                sizes.append(16.0)
+        sel = float(p.info.options.get("selectivity_hint", 0.5))
+        return instr + sum(sizes), sel
+
+    def _order_semantic_selects(self, n: Node) -> Node:
+        n = self._map_children(n, self._order_semantic_selects)
+        # collect a maximal stack Filter_sem(Predict(Filter_sem(Predict(X))))
+        units = []
+        cur = n
+        while (isinstance(cur, Filter) and not _is_cheap(cur.predicate)
+               and isinstance(cur.child, Predict)
+               and cur.child.child is not None):
+            units.append((cur, cur.child))
+            cur = cur.child.child
+        if len(units) < 2:
+            return n
+        # only reorder when each unit's predicate depends solely on its own
+        # predict outputs and base columns below the whole stack
+        base_schema = set(cur.schema(self.cat))
+        for f, p in units:
+            need = _cols_of(f.predicate) - set(p.info.out_cols)
+            if not need <= base_schema:
+                return n
+            if not set(p.info.inputs) <= base_schema:
+                return n
+        ranked = sorted(units, key=lambda fp: self._sem_unit_cost(fp[0]))
+        plan = cur
+        for f, p in ranked:                 # cheapest wraps first → innermost
+            plan = Filter(Predict(plan, p.info), f.predicate, f.selectivity)
+        return plan
+
+
+def _walk(n: Node):
+    yield n
+    for c in n.children:
+        yield from _walk(c)
+
+
+def _find_base_column(plan: Node, col: str, cat) -> Optional[np.ndarray]:
+    for x in _walk(plan):
+        if isinstance(x, Scan):
+            t = cat.table(x.table)
+            if col in t.cols:
+                return t.column(col)
+    return None

@@ -1,0 +1,86 @@
+"""Pallas TPU decode attention: one query token per sequence against a long
+(ring-buffered) KV cache. Memory-bound by the cache read — the kernel's job
+is to stream k/v blocks through VMEM exactly once with the streamed-softmax
+accumulator in scratch.
+
+Grid = (B·KV, num_cache_blocks), cache axis innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, spos_ref, q_ref, k_ref, v_ref,
+            o_ref, m_ref, l_ref, acc_ref, *, scale: float, nl: int):
+    lb = pl.program_id(1)
+
+    @pl.when(lb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = qpos_ref[0]                                   # (1,) this sequence
+    spos = spos_ref[0]                                   # (bl,) slot positions
+
+    q = q_ref[0].astype(jnp.float32) * scale             # (G, D)
+    k = k_ref[0].astype(jnp.float32)                     # (bl, D)
+    v = v_ref[0].astype(jnp.float32)                     # (bl, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (G, bl)
+    ok = (spos >= 0) & (spos <= qpos[0])
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(lb == nl - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, slot_positions, q_position,
+                            *, block_l: int = 512, interpret: bool = False):
+    """q (BK, G, D); k_cache, v_cache (BK, L, D); slot_positions (BK, L);
+    q_position (BK, 1). Returns (BK, G, D)."""
+    BK, G, D = q.shape
+    L = k_cache.shape[1]
+    assert L % block_l == 0, (L, block_l)
+    nl = L // block_l
+    scale = 1.0 / math.sqrt(D)
+
+    kern = functools.partial(_kernel, scale=scale, nl=nl)
+    out = pl.pallas_call(
+        kern,
+        grid=(BK, nl),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),             # q_position
+            pl.BlockSpec((1, block_l), lambda b, j: (b, j)),       # slot pos
+            pl.BlockSpec((1, G, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_l, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_l, D), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BK, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_position, slot_positions, q, k_cache, v_cache)
+    return out

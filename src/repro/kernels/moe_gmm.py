@@ -1,0 +1,67 @@
+"""Pallas TPU grouped matmul (MegaBlocks-style) for MoE expert FFNs.
+
+Input rows are pre-sorted by expert and each expert's rows padded to a
+multiple of the row-block size (done in ops.py), so every (bm × bn) output
+tile reads exactly ONE expert's weight tile — the per-row-block expert id
+arrives via scalar prefetch and drives the weight BlockSpec index_map.
+
+Grid = (num_row_blocks, N/bn, M/bk) with the contraction axis innermost,
+accumulating into fp32 VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(block_expert_ref,          # scalar-prefetch: (num_row_blocks,)
+            x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (bm, bk)
+    w = w_ref[0].astype(jnp.float32)            # (bk, bn)
+    acc_ref[...] += jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())))
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gmm_pallas(x, w, block_expert, *, block_m: int = 128, block_n: int = 128,
+               block_k: int = 512, interpret: bool = False):
+    """x (Tp, M) rows sorted+padded by expert; w (E, M, N);
+    block_expert (Tp/block_m,) int32 — expert id per row block.
+    Returns (Tp, N)."""
+    Tp, M = x.shape
+    E, _, N = w.shape
+    assert Tp % block_m == 0 and N % block_n == 0 and M % block_k == 0
+    nm, nn, nk = Tp // block_m, N // block_n, M // block_k
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k),
+                         lambda i, j, k, be: (i, k)),
+            pl.BlockSpec((1, block_k, block_n),
+                         lambda i, j, k, be: (be[i], k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda i, j, k, be: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Tp, N), x.dtype),
+        interpret=interpret,
+    )(block_expert, x, w)
+    return out

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, q_positions, kv_positions, *,
+                        causal=True, window=0, prefix_len=0):
+    """Same folded layout as the kernel: q (BK, G, Sq, D); k, v (BK, Skv, D);
+    positions (BK, S)."""
+    BK, G, Sq, D = q.shape
+    s = jnp.einsum("bgqd,bjd->bgqj", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qp, kp = q_positions, kv_positions
+    valid = kp[:, None, None, :] >= 0
+    if causal:
+        ok = valid & (kp[:, None, None, :] <= qp[:, None, :, None])
+        if window > 0:
+            ok &= kp[:, None, None, :] > qp[:, None, :, None] - window
+        if prefix_len > 0:
+            ok |= valid & (kp[:, None, None, :] < prefix_len)
+    else:
+        ok = valid
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgqj,bjd->bgqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, slot_positions, q_position):
+    """q (BK, G, D); caches (BK, L, D); slot_positions (BK, L);
+    q_position (BK, 1)."""
+    BK, G, D = q.shape
+    s = jnp.einsum("bgd,bld->bgl", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(D)
+    ok = (slot_positions >= 0) & (slot_positions <= q_position)
+    s = jnp.where(ok[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgl,bld->bgd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def gmm_ref(x, w, group_sizes):
+    """x (T, M) rows sorted by expert; w (E, M, N); group_sizes (E,).
+    Dense oracle via per-row expert ids."""
+    T = x.shape[0]
+    ids = jnp.repeat(jnp.arange(w.shape[0]), group_sizes,
+                     total_repeat_length=T)
+    wr = w[ids]                                        # (T, M, N)
+    return jnp.einsum("tm,tmn->tn", x.astype(jnp.float32),
+                      wr.astype(jnp.float32)).astype(x.dtype)
+
+
+def selective_scan_ref(u, dt, A, B, C, D):
+    """Sequential scan oracle (h0 = 0). Shapes as the kernel."""
+    from repro.models.mamba import selective_scan_ref as _ref
+    Bz, _, Di = u.shape
+    h0 = jnp.zeros((Bz, Di, A.shape[1]), jnp.float32)
+    y, h = _ref(u, dt, A, B, C, D, h0)
+    return y, h
+
+
+def constrained_sample_ref(logits, mask, noise, *, temperature=1.0):
+    x = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    x = x + noise.astype(jnp.float32)
+    x = jnp.where(mask != 0, x, NEG_INF)
+    return jnp.argmax(x, axis=-1).astype(jnp.int32)

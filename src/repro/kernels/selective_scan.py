@@ -1,0 +1,82 @@
+"""Pallas TPU selective scan (mamba-1): chunked recurrence with the hidden
+state carried in VMEM scratch across sequential chunk grid steps.
+
+Grid = (B, Di/bd, S/chunk); the chunk axis is innermost and sequential —
+scratch persists across it, so the state h (bd, N) never round-trips to
+HBM between chunks. Inside a chunk the recurrence is a fori_loop over time
+steps on (bd, N) vectors (VPU work; bd·N sized to fill lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
+            y_ref, hout_ref, h_ref, *, chunk: int, nc: int):
+    cb = pl.program_id(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...].astype(jnp.float32)                    # (bd, N)
+    D = d_ref[...].astype(jnp.float32)                    # (bd,)
+
+    def step(t, h):
+        u_t = u_ref[0, t].astype(jnp.float32)             # (bd,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)           # (bd,)
+        b_t = b_ref[0, t].astype(jnp.float32)             # (N,)
+        c_t = c_ref[0, t].astype(jnp.float32)             # (N,)
+        a = jnp.exp(dt_t[:, None] * A)                    # (bd, N)
+        h = a * h + (dt_t * u_t)[:, None] * b_t[None, :]
+        y = jnp.sum(h * c_t[None, :], axis=-1) + D * u_t  # (bd,)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(cb == nc - 1)
+    def _finalize():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def selective_scan_pallas(u, dt, A, B, C, D, *, chunk: int = 256,
+                          block_d: int = 128, interpret: bool = False):
+    """u, dt (Bz, S, Di); A (Di, N); B, C (Bz, S, N); D (Di,).
+    Returns (y (Bz, S, Di), h_final (Bz, Di, N)). h0 = 0 (prefill-from-start;
+    the engine's continued-decode path uses the jnp recurrence)."""
+    Bz, S, Di = u.shape
+    N = A.shape[1]
+    assert S % chunk == 0 and Di % block_d == 0, (S, Di)
+    nc, nd = S // chunk, Di // block_d
+
+    kern = functools.partial(_kernel, chunk=chunk, nc=nc)
+    y, h_final = pl.pallas_call(
+        kern,
+        grid=(Bz, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),  # u
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),  # dt
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),            # A
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),        # B
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),        # C
+            pl.BlockSpec((block_d,), lambda b, d, c: (d,)),                # D
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bz, S, Di), jnp.float32),
+            jax.ShapeDtypeStruct((Bz, Di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, A, B, C, D)
+    return y, h_final

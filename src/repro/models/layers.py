@@ -1,0 +1,332 @@
+"""Shared neural-net layers: norms, RoPE, flash attention (custom VJP),
+decode attention, MLPs.
+
+The flash attention here is the pure-jnp oracle/production fallback: a
+blockwise-streamed softmax identical in structure to the Pallas kernel in
+`repro.kernels.flash_attention`. It carries a hand-written backward pass so
+that neither forward nor backward ever materializes an (Sq × Skv) score
+matrix — this is what makes the 32k/500k dry-run cells compile with sane
+memory footprints.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# -- norms ---------------------------------------------------------------------
+def rmsnorm(x: jax.Array, w: Optional[jax.Array]) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + 1e-6)
+    if w is not None:
+        y = y * w.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, w: Optional[jax.Array], b: Optional[jax.Array]) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    if w is not None:
+        y = y * w.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(norm_type: str, x: jax.Array, params: Optional[dict]) -> jax.Array:
+    if norm_type == "rmsnorm":
+        return rmsnorm(x, params["scale"] if params else None)
+    if norm_type == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    if norm_type == "nonparam_ln":
+        return layernorm(x, None, None)
+    raise ValueError(norm_type)
+
+
+# -- rotary embeddings ----------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) absolute positions."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- flash attention (blockwise, custom VJP) ------------------------------------
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _block_mask(qpos, kpos, causal: bool, window: int, prefix_len: int = 0):
+    """qpos (Bq,), kpos (Bk,) → (Bq, Bk) bool mask of VALID entries.
+    prefix_len > 0 gives prefix-LM masking: positions < prefix_len are
+    bidirectionally visible (PaliGemma-style image+prefix block)."""
+    present = kpos[None, :] >= 0
+    valid = present
+    if causal:
+        valid = present & (kpos[None, :] <= qpos[:, None])
+        if window > 0:
+            valid &= kpos[None, :] > qpos[:, None] - window
+        if prefix_len > 0:
+            valid |= present & (kpos[None, :] < prefix_len)
+    return valid
+
+
+def _scan_map(f, xs, unroll):
+    """lax.map with an unroll option (cost-calibration compiles unroll so
+    XLA's HloCostAnalysis sees every iteration)."""
+    def body(_, x):
+        return None, f(x)
+    _, ys = jax.lax.scan(body, None, xs, unroll=unroll)
+    return ys
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10, 11))
+def flash_attention(q, k, v, q_positions, kv_positions,
+                    causal: bool = True, window: int = 0,
+                    prefix_len: int = 0,
+                    block_q: int = 512, block_kv: int = 1024,
+                    unroll: bool = False, banded: bool = False):
+    """Blockwise attention. q (B,Sq,H,D); k,v (B,Skv,KV,D); GQA via H = KV*G.
+    positions are absolute (used for RoPE-independent masking); kv position
+    -1 marks padding. Returns (B, Sq, H, D) in q.dtype.
+    """
+    out, _ = _flash_fwd(q, k, v, q_positions, kv_positions,
+                        causal, window, prefix_len, block_q, block_kv,
+                        unroll, banded)
+    return out
+
+
+def _flash_fwd(q, k, v, q_positions, kv_positions, causal, window, prefix_len,
+               block_q, block_kv, unroll=False, banded=False):
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    qp = _pad_to(q, 1, block_q)
+    qpos = _pad_to(q_positions, 1, block_q, value=-1)
+    kp = _pad_to(k, 1, block_kv)
+    vp = _pad_to(v, 1, block_kv)
+    kpos = _pad_to(kv_positions, 1, block_kv, value=-1)
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_kv
+
+    qb = qp.reshape(B, nq, block_q, KV, G, D).astype(jnp.float32) * scale
+    kb = kp.reshape(B, nk, block_kv, KV, D).astype(jnp.float32)
+    vb = vp.reshape(B, nk, block_kv, KV, D).astype(jnp.float32)
+    qposb = qpos.reshape(B, nq, block_q)
+    kposb = kpos.reshape(B, nk, block_kv)
+
+    # Banded mode (causal sliding window): per q block only the
+    # ceil((window+block_q)/block_kv)+1 kv blocks intersecting
+    # [q_start - window, q_end] are touched — a 90%+ FLOP/byte cut for
+    # long sequences with small windows (§Perf opt A).
+    use_band = banded and causal and window > 0 and prefix_len == 0
+    nkw = min(nk, (window + block_q + block_kv - 1) // block_kv + 1)
+
+    def per_q_block(qblk, qpos_blk):
+        # qblk (B, block_q, KV, G, D); qpos_blk (B, block_q)
+        def inner(carry, kblk, vblk, kpos_blk, live):
+            m, l, acc = carry
+            s = jnp.einsum("bqkgd,bjkd->bkgqj", qblk, kblk)
+            mask = jax.vmap(_block_mask, in_axes=(0, 0, None, None, None))(
+                qpos_blk, kpos_blk, causal, window, prefix_len)  # (B, bq, bk)
+            mask = mask & live
+            s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bkgqj,bjkd->bkgqd", p, vblk)
+            return (m_new, l_new, acc_new)
+
+        m0 = jnp.full((B, KV, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, block_q, D), jnp.float32)
+
+        if use_band:
+            # min valid position across the whole block (pads excluded);
+            # banded mode assumes near-uniform positions across the batch
+            qmin = jnp.min(jnp.where(qpos_blk >= 0, qpos_blk, 2 ** 30))
+            jb0 = jnp.clip((qmin - window) // block_kv, 0, nk - 1)
+
+            def kv_step(carry, i):
+                j = jnp.clip(jb0 + i, 0, nk - 1)
+                live = (jb0 + i) <= (nk - 1)        # clamp guard: no dups
+                kblk = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+                vblk = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+                kpos_blk = jax.lax.dynamic_index_in_dim(kposb, j, 1,
+                                                        keepdims=False)
+                return inner(carry, kblk, vblk, kpos_blk, live), None
+
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nkw), unroll=unroll)
+        else:
+            def kv_step(carry, xs):
+                kblk, vblk, kpos_blk = xs
+                return inner(carry, kblk, vblk, kpos_blk, True), None
+
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+                 kposb.transpose(1, 0, 2)), unroll=unroll)
+        l = jnp.maximum(l, 1e-30)
+        o = acc / l[..., None]                      # (B, KV, G, bq, D)
+        lse = m + jnp.log(l)                        # (B, KV, G, bq)
+        return o, lse
+
+    o_blocks, lse_blocks = _scan_map(
+        lambda xs: per_q_block(*xs),
+        (qb.transpose(1, 0, 2, 3, 4, 5), qposb.transpose(1, 0, 2)), unroll)
+    # o_blocks (nq, B, KV, G, bq, D) → (B, Sq, H, D)
+    o = o_blocks.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * block_q, H, D)
+    lse = lse_blocks.transpose(1, 0, 4, 2, 3).reshape(B, nq * block_q, H)
+    o = o[:, :Sq].astype(q.dtype)
+    lse = lse[:, :Sq]
+    return o, (q, k, v, q_positions, kv_positions, o, lse)
+
+
+def _flash_bwd(causal, window, prefix_len, block_q, block_kv, unroll, banded,
+               res, g):
+    q, k, v, q_positions, kv_positions, o, lse = res
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    qp = _pad_to(q, 1, block_q).astype(jnp.float32)
+    op = _pad_to(o, 1, block_q).astype(jnp.float32)
+    gp = _pad_to(g, 1, block_q).astype(jnp.float32)
+    lsep = _pad_to(lse, 1, block_q, value=0.0)
+    qpos = _pad_to(q_positions, 1, block_q, value=-1)
+    kp = _pad_to(k, 1, block_kv).astype(jnp.float32)
+    vp = _pad_to(v, 1, block_kv).astype(jnp.float32)
+    kpos = _pad_to(kv_positions, 1, block_kv, value=-1)
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_kv
+
+    qb = qp.reshape(B, nq, block_q, KV, G, D)
+    gb = gp.reshape(B, nq, block_q, KV, G, D)
+    ob = op.reshape(B, nq, block_q, KV, G, D)
+    lseb = lsep.reshape(B, nq, block_q, KV, G)   # lse laid out (B,S,H)→(...,KV,G)
+    qposb = qpos.reshape(B, nq, block_q)
+    kb = kp.reshape(B, nk, block_kv, KV, D)
+    vb = vp.reshape(B, nk, block_kv, KV, D)
+    kposb = kpos.reshape(B, nk, block_kv)
+
+    # delta_i = rowsum(dO * O)
+    delta = jnp.sum(gb * ob, axis=-1)            # (B, nq, bq, KV, G)
+
+    def per_kv_block(kblk, vblk, kpos_blk):
+        # accumulate dk, dv over all q blocks; also emit dq contribution
+        def q_step(carry, xs):
+            dk, dv = carry
+            qblk, gblk, lse_blk, dlt_blk, qpos_blk = xs
+            s = jnp.einsum("bqkgd,bjkd->bkgqj", qblk * scale, kblk)
+            mask = jax.vmap(_block_mask, in_axes=(0, 0, None, None, None))(
+                qpos_blk, kpos_blk, causal, window, prefix_len)
+            s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+            p = jnp.exp(s - lse_blk.transpose(0, 2, 3, 1)[..., None])  # (B,KV,G,bq,bk)
+            dp = jnp.einsum("bqkgd,bjkd->bkgqj", gblk, vblk)
+            ds = p * (dp - dlt_blk.transpose(0, 2, 3, 1)[..., None])
+            dq_blk = jnp.einsum("bkgqj,bjkd->bqkgd", ds, kblk) * scale
+            dk = dk + jnp.einsum("bkgqj,bqkgd->bjkd", ds, qblk * scale)
+            dv = dv + jnp.einsum("bkgqj,bqkgd->bjkd", p, gblk)
+            return (dk, dv), dq_blk
+
+        dk0 = jnp.zeros((B, block_kv, KV, D), jnp.float32)
+        dv0 = jnp.zeros((B, block_kv, KV, D), jnp.float32)
+        (dk, dv), dq_parts = jax.lax.scan(
+            q_step, (dk0, dv0),
+            (qb.transpose(1, 0, 2, 3, 4, 5), gb.transpose(1, 0, 2, 3, 4, 5),
+             lseb.transpose(1, 0, 2, 3, 4), delta.transpose(1, 0, 2, 3, 4),
+             qposb.transpose(1, 0, 2)), unroll=unroll)
+        return dk, dv, dq_parts  # dq_parts (nq, B, bq, KV, G, D)
+
+    dk_blocks, dv_blocks, dq_sum = _scan_map(
+        lambda xs: per_kv_block(*xs),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+         kposb.transpose(1, 0, 2)), unroll)
+    # dq: sum over kv blocks → (nq, B, bq, KV, G, D)
+    dq = dq_sum.sum(axis=0).transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * block_q, H, D)
+    dk = dk_blocks.transpose(1, 0, 2, 3, 4).reshape(B, nk * block_kv, KV, D)
+    dv = dv_blocks.transpose(1, 0, 2, 3, 4).reshape(B, nk * block_kv, KV, D)
+    return (dq[:, :Sq].astype(q.dtype), dk[:, :Skv].astype(k.dtype),
+            dv[:, :Skv].astype(v.dtype), None, None)
+
+
+def _flash_fwd_rule(q, k, v, qpos, kpos, causal, window, prefix_len,
+                    block_q, block_kv, unroll, banded):
+    out, res = _flash_fwd(q, k, v, qpos, kpos, causal, window, prefix_len,
+                          block_q, block_kv, unroll, banded)
+    return out, res
+
+
+flash_attention.defvjp(_flash_fwd_rule, _flash_bwd)
+
+
+# -- reference (naive) attention for tests --------------------------------------
+def reference_attention(q, k, v, q_positions, kv_positions,
+                        causal=True, window=0, prefix_len=0):
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qf, kf) / math.sqrt(D)
+    mask = jax.vmap(_block_mask, in_axes=(0, 0, None, None, None))(
+        q_positions, kv_positions, causal, window, prefix_len)
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqj,bjkd->bqkgd", p, vf).reshape(B, Sq, H, D)
+    return o.astype(q.dtype)
+
+
+# -- decode attention (single query token vs. long KV cache) --------------------
+def decode_attention(q, k_cache, v_cache, cache_positions, q_position):
+    """q (B, H, D); caches (B, L, KV, D); cache_positions (B, L) absolute
+    positions of each cache slot (-1 = empty); q_position (B,).
+    Returns (B, H, D). Pure jnp — the Pallas twin lives in kernels/decode_attention.
+    """
+    B, H, D = q.shape
+    _, L, KV, _ = k_cache.shape
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, D) / math.sqrt(D)
+    s = jnp.einsum("bkgd,blkd->bkgl", qf, k_cache.astype(jnp.float32))
+    valid = (cache_positions >= 0) & (cache_positions <= q_position[:, None])
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,blkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+# -- MLPs ------------------------------------------------------------------------
+def swiglu_mlp(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu(x @ w_in + b_in)
+    return h @ w_out + b_out

@@ -1,0 +1,159 @@
+"""Mamba-1 selective SSM block (falcon-mamba / hymba's SSM heads).
+
+Training/prefill uses a chunked parallel scan: `lax.scan` over sequence
+chunks carrying the hidden state, `lax.associative_scan` inside each chunk.
+Peak memory is O(B · chunk · d_inner · state) instead of O(B · S · d · N),
+which is what lets the long_500k cells compile. Decode is the O(1)
+single-step recurrence over carried (conv_state, ssm_state).
+
+The Pallas twin (same chunked structure, VMEM-tiled) lives in
+`repro.kernels.selective_scan`; `selective_scan_ref` below is the shared
+sequential oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, conv-1, d_inner) last inputs seen by the conv
+    h: jax.Array      # (B, d_inner, state) SSM hidden state
+
+
+def init_ssm_state(batch: int, d_inner: int, state: int, conv: int,
+                   dtype=jnp.float32) -> SSMState:
+    return SSMState(conv=jnp.zeros((batch, conv - 1, d_inner), dtype),
+                    h=jnp.zeros((batch, d_inner, state), dtype))
+
+
+def _causal_conv(x: jax.Array, conv_w: jax.Array, conv_b: jax.Array,
+                 prev: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x (B,S,D); conv_w (K,D); prev (B,K-1,D).
+    Returns (y (B,S,D), new_prev)."""
+    K = conv_w.shape[0]
+    xx = jnp.concatenate([prev.astype(x.dtype), x], axis=1)    # (B, S+K-1, D)
+    y = sum(xx[:, i:i + x.shape[1]] * conv_w[i][None, None, :]
+            for i in range(K))
+    y = y + conv_b[None, None, :]
+    new_prev = xx[:, -(K - 1):] if K > 1 else prev
+    return y, new_prev
+
+
+def selective_scan(u: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                   C: jax.Array, D: jax.Array, h0: jax.Array,
+                   chunk: int = 256, unroll: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked parallel selective scan.
+    u, dt: (Bz, S, Di); A: (Di, N); B, C: (Bz, S, N); D: (Di,); h0: (Bz, Di, N).
+    Returns (y (Bz, S, Di) fp32, h_final (Bz, Di, N))."""
+    Bz, S, Di = u.shape
+    N = A.shape[1]
+    pad = (-S) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = u.shape[1] // chunk
+
+    uf = u.astype(jnp.float32).reshape(Bz, nc, chunk, Di)
+    dtf = dt.astype(jnp.float32).reshape(Bz, nc, chunk, Di)
+    Bf = B.astype(jnp.float32).reshape(Bz, nc, chunk, N)
+    Cf = C.astype(jnp.float32).reshape(Bz, nc, chunk, N)
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(h, xs):
+        uc, dtc, bc, cc = xs                       # (Bz, chunk, ...)
+        a = jnp.exp(dtc[..., None] * Af[None, None])          # (Bz,ck,Di,N)
+        b = (dtc * uc)[..., None] * bc[:, :, None, :]          # (Bz,ck,Di,N)
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_cum, b_cum = jax.lax.associative_scan(comb, (a, b), axis=1)
+        hs = a_cum * h[:, None] + b_cum                        # (Bz,ck,Di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cc)
+        h_new = hs[:, -1]
+        return h_new, y
+
+    h_final, ys = jax.lax.scan(
+        chunk_step, h0.astype(jnp.float32),
+        (uf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2, 3),
+         Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3)), unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3).reshape(Bz, nc * chunk, Di)[:, :S]
+    y = y + u.astype(jnp.float32)[:, :S] * D[None, None, :]
+    return y, h_final
+
+
+def selective_scan_ref(u, dt, A, B, C, D, h0):
+    """Sequential oracle (one step at a time)."""
+    Bz, S, Di = u.shape
+    uf, dtf = u.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf, Af = B.astype(jnp.float32), C.astype(jnp.float32), A.astype(jnp.float32)
+
+    def step(h, xs):
+        ut, dtt, bt, ct = xs
+        a = jnp.exp(dtt[..., None] * Af[None])                 # (Bz, Di, N)
+        h = a * h + (dtt * ut)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (uf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+                          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + uf * D[None, None, :]
+    return y, h
+
+
+def mamba_mixer(x: jax.Array, params: dict, *, ssm_state_dim: int,
+                dt_rank: int, conv_dim: int, mode: str = "train",
+                state: Optional[SSMState] = None, chunk: int = 256,
+                scan_fn=selective_scan) -> Tuple[jax.Array, Optional[SSMState]]:
+    """Full mamba-1 mixer. x (B, S, M) [S=1 for decode]. params:
+    in_x/in_z (M, Di), conv_w (K, Di), conv_b (Di), x_proj (Di, R+2N),
+    dt_proj (R, Di), dt_bias (Di), A_log (Di, N), D (Di), out_proj (Di, M).
+    Returns (out (B, S, M), new_state or None)."""
+    Bz, S, M = x.shape
+    Di = params["A_log"].shape[0]
+    N, R, K = ssm_state_dim, dt_rank, conv_dim
+
+    x_in = x @ params["in_x"].astype(x.dtype)                  # (B, S, Di)
+    z = x @ params["in_z"].astype(x.dtype)                     # (B, S, Di)
+
+    if state is None:
+        state = init_ssm_state(Bz, Di, N, K, jnp.float32)
+    conv_out, new_conv = _causal_conv(
+        x_in, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype),
+        state.conv)
+    u = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+
+    dbc = u @ params["x_proj"].astype(u.dtype)                 # (B, S, R+2N)
+    dt_raw = dbc[..., :R]
+    Bmat = dbc[..., R:R + N]
+    Cmat = dbc[..., R + N:]
+    dt = jax.nn.softplus(
+        (dt_raw @ params["dt_proj"].astype(dt_raw.dtype)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))               # (B, S, Di)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (Di, N)
+
+    if mode == "decode":
+        # single-step recurrence
+        a = jnp.exp(dt[:, 0, :, None] * A[None])               # (B, Di, N)
+        h = a * state.h + (dt[:, 0] * u[:, 0].astype(jnp.float32))[..., None] \
+            * Bmat[:, 0, None, :].astype(jnp.float32)
+        y = jnp.einsum("bdn,bn->bd", h, Cmat[:, 0].astype(jnp.float32))
+        y = y + u[:, 0].astype(jnp.float32) * params["D"].astype(jnp.float32)
+        y = y[:, None]
+        new_state = SSMState(conv=new_conv.astype(jnp.float32), h=h)
+    else:
+        y, h = scan_fn(u, dt, A, Bmat, Cmat,
+                       params["D"].astype(jnp.float32), state.h)
+        new_state = SSMState(conv=new_conv.astype(jnp.float32), h=h)
+
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"].astype(x.dtype)
+    return out, new_state

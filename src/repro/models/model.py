@@ -1,0 +1,479 @@
+"""Model assembly for all assigned architecture families.
+
+One generic decoder/encoder stack, specialised by `ModelConfig.family`:
+  dense/moe/vlm : pre-norm attention + (MLP | MoE) residual blocks
+  ssm           : mamba-1 mixer blocks (attention-free)
+  hybrid        : parallel attention ∥ mamba heads + MLP (hymba)
+  encoder       : bidirectional pre-LN transformer (hubert)
+
+All layers are stacked on a leading axis and executed with `jax.lax.scan`
+(+ optional `jax.checkpoint`), keeping the HLO size O(1) in depth — both a
+compile-time necessity on this box and the production pattern for 1000+
+node runs.
+
+Three modes:
+  train   — full-sequence forward, no cache, returns token logits
+  prefill — full-sequence forward, emits a decode cache
+  decode  — single-token step against a (ring-buffered) KV / SSM cache
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models.config import (DENSE, ENCODER, HYBRID, MOE as MOE_F, SSM,
+                                 VLM, ModelConfig)
+
+PyTree = Any
+
+
+def _dt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# =============================== parameters ===================================
+def _layer_shapes(cfg: ModelConfig) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """Per-layer leaf name → (shape-without-L, dtype)."""
+    m, pd = cfg.d_model, _dt(cfg.param_dtype)
+    h, kv, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
+    out: Dict[str, Tuple[Tuple[int, ...], Any]] = {}
+
+    def norm(prefix: str):
+        if cfg.norm_type == "rmsnorm":
+            out[f"{prefix}.scale"] = ((m,), pd)
+        elif cfg.norm_type == "layernorm":
+            out[f"{prefix}.scale"] = ((m,), pd)
+            out[f"{prefix}.bias"] = ((m,), pd)
+        # nonparam_ln: no params
+
+    if cfg.has_attention:
+        norm("ln_attn")
+        # 3D layout keeps head vs head_dim sharding choices expressible
+        out["attn.wq"] = ((m, h, hd), pd)
+        out["attn.wk"] = ((m, kv, hd), pd)
+        out["attn.wv"] = ((m, kv, hd), pd)
+        out["attn.wo"] = ((h, hd, m), pd)
+        if cfg.qkv_bias:
+            out["attn.bq"] = ((h, hd), pd)
+            out["attn.bk"] = ((kv, hd), pd)
+            out["attn.bv"] = ((kv, hd), pd)
+    if cfg.has_ssm:
+        if not cfg.has_attention:
+            norm("ln_ssm")
+        di, n, r, k = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_eff, cfg.ssm_conv
+        out["ssm.in_x"] = ((m, di), pd)      # split leaves: never slice a
+        out["ssm.in_z"] = ((m, di), pd)      # model-sharded dim
+        out["ssm.conv_w"] = ((k, di), pd)
+        out["ssm.conv_b"] = ((di,), pd)
+        out["ssm.x_proj"] = ((di, r + 2 * n), pd)
+        out["ssm.dt_proj"] = ((r, di), pd)
+        out["ssm.dt_bias"] = ((di,), pd)
+        out["ssm.A_log"] = ((di, n), jnp.float32)
+        out["ssm.D"] = ((di,), jnp.float32)
+        out["ssm.out_proj"] = ((di, m), pd)
+    if cfg.has_mlp:
+        norm("ln_mlp")
+        if cfg.mlp_act == "silu":
+            out["mlp.w_gate"] = ((m, cfg.d_ff), pd)
+            out["mlp.w_up"] = ((m, cfg.d_ff), pd)
+            out["mlp.w_down"] = ((cfg.d_ff, m), pd)
+        else:
+            out["mlp.w_in"] = ((m, cfg.d_ff), pd)
+            out["mlp.b_in"] = ((cfg.d_ff,), pd)
+            out["mlp.w_out"] = ((cfg.d_ff, m), pd)
+            out["mlp.b_out"] = ((m,), pd)
+    if cfg.has_moe:
+        norm("ln_mlp")
+        e, f = cfg.num_experts, cfg.d_ff
+        out["moe.router"] = ((m, e), pd)
+        out["moe.w_gate"] = ((e, m, f), pd)
+        out["moe.w_up"] = ((e, m, f), pd)
+        out["moe.w_down"] = ((e, f, m), pd)
+    return out
+
+
+def param_specs(cfg: ModelConfig) -> PyTree:
+    """ShapeDtypeStructs for the full parameter tree (stacked layers)."""
+    m, vp, pd = cfg.d_model, cfg.padded_vocab, _dt(cfg.param_dtype)
+    tree: Dict[str, Any] = {"layers": {}}
+    for name, (shape, dt) in _layer_shapes(cfg).items():
+        tree["layers"][name] = jax.ShapeDtypeStruct((cfg.num_layers,) + shape, dt)
+    if cfg.family != ENCODER:
+        tree["embed"] = jax.ShapeDtypeStruct((vp, m), pd)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = jax.ShapeDtypeStruct((m, vp), pd)
+    if cfg.norm_type == "rmsnorm":
+        tree["final_norm.scale"] = jax.ShapeDtypeStruct((m,), pd)
+    elif cfg.norm_type == "layernorm":
+        tree["final_norm.scale"] = jax.ShapeDtypeStruct((m,), pd)
+        tree["final_norm.bias"] = jax.ShapeDtypeStruct((m,), pd)
+    return tree
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    specs = param_specs(cfg)
+    flat_paths, treedef = jax.tree_util.tree_flatten_with_path(specs)
+    keys = jax.random.split(key, len(flat_paths))
+    vals = []
+    for k, (path, s) in zip(keys, flat_paths):
+        p = jax.tree_util.keystr(path)
+        stacked = "layers" in p
+        core_ndim = len(s.shape) - (1 if stacked else 0)
+        if "A_log" in p:
+            n = s.shape[-1]
+            v = jnp.broadcast_to(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)),
+                                 s.shape)
+        elif "ssm.D" in p:
+            v = jnp.ones(s.shape, jnp.float32)
+        elif core_ndim == 1:
+            v = (jnp.ones if "scale" in p else jnp.zeros)(s.shape, jnp.float32)
+        else:
+            if "attn.w" in p:
+                start = 1 if stacked else 0
+                fan_in = (s.shape[start] if p.endswith(("wq']", "wk']", "wv']"))
+                          else s.shape[start] * s.shape[start + 1])
+            else:
+                fan_in = s.shape[-2]
+            std = 1.0 / math.sqrt(max(1, fan_in))
+            v = jax.random.normal(k, s.shape, jnp.float32) * std
+        vals.append(v.astype(s.dtype))
+    return treedef.unflatten(vals)
+
+
+def param_count_actual(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ================================ cache =======================================
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int,
+                include_row_idx: bool = False) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the decode cache. include_row_idx adds the
+    per-row write cursor (continuous batching / sharded-length caches —
+    the write becomes a masked elementwise update instead of a DUS on a
+    sharded dim)."""
+    ln, cd = cfg.num_layers, _dt(cfg.compute_dtype)
+    out: Dict[str, Any] = {"idx": jax.ShapeDtypeStruct((), jnp.int32)}
+    if include_row_idx:
+        out["row_idx"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    if cfg.has_attention:
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        lc = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        out["k"] = jax.ShapeDtypeStruct((ln, batch, lc, kv, hd), cd)
+        out["v"] = jax.ShapeDtypeStruct((ln, batch, lc, kv, hd), cd)
+        out["slot_pos"] = jax.ShapeDtypeStruct((batch, lc), jnp.int32)
+    if cfg.has_ssm:
+        out["conv"] = jax.ShapeDtypeStruct(
+            (ln, batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.float32)
+        out["h"] = jax.ShapeDtypeStruct(
+            (ln, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               include_row_idx: bool = False) -> Dict[str, Any]:
+    specs = cache_specs(cfg, batch, cache_len, include_row_idx)
+    out = {k: jnp.zeros(s.shape, s.dtype) for k, s in specs.items()}
+    if "slot_pos" in out:
+        out["slot_pos"] = jnp.full(specs["slot_pos"].shape, -1, jnp.int32)
+    return out
+
+
+# ================================ blocks ======================================
+def _norm_p(lp: Dict[str, jax.Array], prefix: str) -> Optional[dict]:
+    scale = lp.get(f"{prefix}.scale")
+    bias = lp.get(f"{prefix}.bias")
+    if scale is None and bias is None:
+        return None
+    return {"scale": scale, "bias": bias}
+
+
+def _attention(cfg: ModelConfig, x, lp, positions, mode, ck, cv, slot_pos, idx,
+               attn_fn=None, decode_attn_fn=None, extend_offset: int = 0,
+               row_idx=None, kv_cs=MOE.Identity):
+    """x (B,S,M). Returns (out (B,S,M), new_ck, new_cv).
+    extend_offset > 0 (prefill mode): attend over [cache[:offset] ++ new] and
+    write the new K/V at slot offset — chunked prefill / shared-prefix reuse."""
+    B, S, m = x.shape
+    h, kv, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
+    cd = _dt(cfg.compute_dtype)
+    q = jnp.einsum("bsm,mhd->bshd", x, lp["attn.wq"].astype(cd))
+    k = jnp.einsum("bsm,mhd->bshd", x, lp["attn.wk"].astype(cd))
+    v = jnp.einsum("bsm,mhd->bshd", x, lp["attn.wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + lp["attn.bq"].astype(cd)
+        k = k + lp["attn.bk"].astype(cd)
+        v = v + lp["attn.bv"].astype(cd)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    if mode != "decode":
+        k = kv_cs(k)        # sequence-parallel attention: kv replicated
+        v = kv_cs(v)
+
+    new_ck, new_cv = ck, cv
+    if mode == "decode":
+        lc = ck.shape[1]
+        if row_idx is not None:
+            # per-row write slots (continuous batching: ragged fill levels)
+            slot_b = row_idx % lc                          # (B,)
+            hit = (jnp.arange(lc)[None, :] == slot_b[:, None])  # (B, lc)
+            new_ck = jnp.where(hit[:, :, None, None], k.astype(ck.dtype), ck)
+            new_cv = jnp.where(hit[:, :, None, None], v.astype(cv.dtype), cv)
+            spos = jnp.where(hit, positions[:, :1], slot_pos)
+        else:
+            slot = idx % lc
+            new_ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+            new_cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+            spos = jnp.where(jnp.arange(lc)[None, :] == slot, positions[:, :1],
+                             slot_pos)
+        fn = decode_attn_fn or L.decode_attention
+        o = fn(q[:, 0], new_ck, new_cv, spos, positions[:, 0])[:, None]
+    elif mode == "prefill" and extend_offset > 0:
+        off = extend_offset
+        lc = ck.shape[1]
+        assert off + S <= lc and not cfg.sliding_window, (off, S, lc)
+        k_all = jnp.concatenate([ck[:, :off].astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([cv[:, :off].astype(v.dtype), v], axis=1)
+        kv_pos = jnp.concatenate([slot_pos[:, :off], positions], axis=1)
+        fn = attn_fn or L.flash_attention
+        o = fn(q, k_all, v_all, positions, kv_pos,
+               causal=cfg.causal, window=0,
+               prefix_len=cfg.num_prefix_tokens if cfg.family == VLM else 0)
+        new_ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, off, 0, 0))
+        new_cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, off, 0, 0))
+    else:
+        fn = attn_fn or L.flash_attention
+        o = fn(q, k, v, positions, positions,
+               causal=cfg.causal, window=cfg.sliding_window,
+               prefix_len=cfg.num_prefix_tokens if cfg.family == VLM else 0)
+        if mode == "prefill":
+            lc = ck.shape[1]
+            if S >= lc:
+                shift = S % lc
+                new_ck = jnp.roll(k[:, S - lc:].astype(ck.dtype), shift, axis=1)
+                new_cv = jnp.roll(v[:, S - lc:].astype(cv.dtype), shift, axis=1)
+            else:
+                new_ck = jax.lax.dynamic_update_slice(
+                    ck, k.astype(ck.dtype), (0, 0, 0, 0))
+                new_cv = jax.lax.dynamic_update_slice(
+                    cv, v.astype(cv.dtype), (0, 0, 0, 0))
+    out = jnp.einsum("bshd,hdm->bsm", o, lp["attn.wo"].astype(cd))
+    return out, new_ck, new_cv
+
+
+def _block(cfg: ModelConfig, x, lp, positions, mode, cache_l, *,
+           num_groups=1, dispatch_cs=MOE.Identity, combine_cs=MOE.Identity,
+           attn_fn=None, decode_attn_fn=None, scan_fn=None,
+           extend_offset: int = 0, kv_cs=MOE.Identity):
+    """One residual block. cache_l: per-layer cache slice dict (or {})."""
+    B, S, m = x.shape
+    new_cache = dict(cache_l)
+    slot_pos = cache_l.get("slot_pos")
+    idx = cache_l.get("idx", jnp.int32(0))
+
+    if cfg.family == HYBRID:
+        xin = L.apply_norm(cfg.norm_type, x, _norm_p(lp, "ln_attn"))
+        a, nk, nv = _attention(cfg, xin, lp, positions, mode,
+                               cache_l.get("k"), cache_l.get("v"), slot_pos, idx,
+                               attn_fn, decode_attn_fn, extend_offset,
+                               cache_l.get("row_idx"), kv_cs)
+        state = None
+        if mode != "train":
+            state = M.SSMState(conv=cache_l["conv"], h=cache_l["h"])
+        s, new_state = M.mamba_mixer(
+            xin, {k[4:]: v for k, v in lp.items() if k.startswith("ssm.")},
+            ssm_state_dim=cfg.ssm_state, dt_rank=cfg.dt_rank_eff,
+            conv_dim=cfg.ssm_conv, mode=("decode" if mode == "decode" else "train"),
+            state=state, scan_fn=scan_fn or M.selective_scan)
+        x = x + 0.5 * (a + s)
+        if mode != "train":
+            new_cache.update(k=nk, v=nv, conv=new_state.conv, h=new_state.h)
+        xin2 = L.apply_norm(cfg.norm_type, x, _norm_p(lp, "ln_mlp"))
+        x = x + L.swiglu_mlp(xin2, lp["mlp.w_gate"].astype(x.dtype),
+                             lp["mlp.w_up"].astype(x.dtype),
+                             lp["mlp.w_down"].astype(x.dtype))
+        return x, new_cache
+
+    if cfg.family == SSM:
+        xin = L.apply_norm(cfg.norm_type, x, _norm_p(lp, "ln_ssm"))
+        state = None
+        if mode != "train":
+            state = M.SSMState(conv=cache_l["conv"], h=cache_l["h"])
+        s, new_state = M.mamba_mixer(
+            xin, {k[4:]: v for k, v in lp.items() if k.startswith("ssm.")},
+            ssm_state_dim=cfg.ssm_state, dt_rank=cfg.dt_rank_eff,
+            conv_dim=cfg.ssm_conv, mode=("decode" if mode == "decode" else "train"),
+            state=state, scan_fn=scan_fn or M.selective_scan)
+        if mode != "train":
+            new_cache.update(conv=new_state.conv, h=new_state.h)
+        return x + s, new_cache
+
+    # attention families: dense / moe / encoder / vlm
+    xin = L.apply_norm(cfg.norm_type, x, _norm_p(lp, "ln_attn"))
+    a, nk, nv = _attention(cfg, xin, lp, positions, mode,
+                           cache_l.get("k"), cache_l.get("v"), slot_pos, idx,
+                           attn_fn, decode_attn_fn, extend_offset,
+                           cache_l.get("row_idx"), kv_cs)
+    x = x + a
+    if mode != "train" and cfg.has_attention:
+        new_cache.update(k=nk, v=nv)
+    xin2 = L.apply_norm(cfg.norm_type, x, _norm_p(lp, "ln_mlp"))
+    if cfg.has_moe:
+        moe_p = {k[4:]: v for k, v in lp.items() if k.startswith("moe.")}
+        y = MOE.moe_block(xin2.reshape(B * S, m), moe_p,
+                          num_experts=cfg.num_experts, top_k=cfg.top_k,
+                          capacity_factor=cfg.capacity_factor,
+                          num_groups=num_groups, dispatch_cs=dispatch_cs,
+                          combine_cs=combine_cs,
+                          compute_dtype=_dt(cfg.compute_dtype))
+        x = x + y.reshape(B, S, m)
+    elif cfg.mlp_act == "silu":
+        x = x + L.swiglu_mlp(xin2, lp["mlp.w_gate"].astype(x.dtype),
+                             lp["mlp.w_up"].astype(x.dtype),
+                             lp["mlp.w_down"].astype(x.dtype))
+    else:
+        x = x + L.gelu_mlp(xin2, lp["mlp.w_in"].astype(x.dtype),
+                           lp["mlp.b_in"].astype(x.dtype),
+                           lp["mlp.w_out"].astype(x.dtype),
+                           lp["mlp.b_out"].astype(x.dtype))
+    return x, new_cache
+
+
+# ============================== full forward ==================================
+_LAYER_CACHE_KEYS = ("k", "v", "conv", "h")
+
+
+def forward(cfg: ModelConfig, params: PyTree, batch: Dict[str, jax.Array],
+            mode: str = "train", cache: Optional[Dict[str, Any]] = None, *,
+            remat: bool = True, num_groups: int = 1,
+            dispatch_cs=MOE.Identity, combine_cs=MOE.Identity,
+            attn_fn=None, decode_attn_fn=None, scan_fn=None,
+            logits_cs=MOE.Identity, last_only: bool = False,
+            unroll_layers: bool = False, extend_offset: int = 0,
+            residual_cs=MOE.Identity, kv_cs=MOE.Identity,
+            remat_policy: str = "nothing"
+            ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    """Run the stack. batch: tokens (B,S) int32 | embeds (B,S,M); positions
+    (B,S). Returns (logits (B,S,V), new_cache or None)."""
+    cd = _dt(cfg.compute_dtype)
+    positions = batch["positions"]
+
+    if "embeds" in batch:                       # encoder / stub frontend
+        x = batch["embeds"].astype(cd)
+    else:
+        x = jnp.take(params["embed"].astype(cd), batch["tokens"], axis=0)
+        if cfg.scale_embed:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+        if cfg.family == VLM and "prefix_embeds" in batch:
+            x = jnp.concatenate([batch["prefix_embeds"].astype(cd), x], axis=1)
+            positions = jnp.concatenate(
+                [jnp.broadcast_to(jnp.arange(batch["prefix_embeds"].shape[1],
+                                             dtype=jnp.int32)[None],
+                                  batch["prefix_embeds"].shape[:2]),
+                 batch["positions"] + batch["prefix_embeds"].shape[1]], axis=1)
+
+    stacked = params["layers"]
+    shared_cache = {}
+    layer_cache = {}
+    if cache is not None:
+        layer_cache = {k: cache[k] for k in _LAYER_CACHE_KEYS if k in cache}
+        shared_cache = {k: v for k, v in cache.items()
+                        if k not in _LAYER_CACHE_KEYS}
+
+    idx = shared_cache.get("idx", jnp.int32(0))
+    slot_pos = shared_cache.get("slot_pos")
+    row_idx = shared_cache.get("row_idx")
+
+    x = residual_cs(x)
+
+    def body(x, xs):
+        lp, cl = xs
+        cl = dict(cl)
+        if slot_pos is not None:
+            cl["slot_pos"] = slot_pos
+        if row_idx is not None:
+            cl["row_idx"] = row_idx
+        cl["idx"] = idx
+        y, nc = _block(cfg, x, lp, positions, mode, cl,
+                       num_groups=num_groups, dispatch_cs=dispatch_cs,
+                       combine_cs=combine_cs, attn_fn=attn_fn,
+                       decode_attn_fn=decode_attn_fn, scan_fn=scan_fn,
+                       extend_offset=extend_offset, kv_cs=kv_cs)
+        y = residual_cs(y)
+        nc = {k: nc[k] for k in _LAYER_CACHE_KEYS if k in nc}
+        return y, nc
+
+    policies = {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }
+    body_fn = jax.checkpoint(body, policy=policies[remat_policy]) \
+        if (remat and mode == "train") else body
+
+    x, new_layer_cache = jax.lax.scan(body_fn, x, (stacked, layer_cache),
+                                      unroll=unroll_layers)
+
+    fn_params = {k: v for k, v in params.items() if k.startswith("final_norm")}
+    x = L.apply_norm(cfg.norm_type, x, _norm_p(fn_params, "final_norm"))
+
+    if last_only:
+        x = x[:, -1:]
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(cd)
+    logits = logits_cs(logits)
+
+    new_cache = None
+    if mode != "train" and cache is not None:
+        new_cache = dict(new_layer_cache)
+        if mode == "decode":
+            lc = cache["k"].shape[2] if "k" in cache else 0
+            if slot_pos is not None:
+                if row_idx is not None:
+                    hit = jnp.arange(lc)[None, :] == (row_idx % lc)[:, None]
+                else:
+                    hit = (jnp.arange(lc) == idx % lc)[None, :]
+                new_cache["slot_pos"] = jnp.where(hit, positions[:, :1],
+                                                  slot_pos)
+            if row_idx is not None:
+                new_cache["row_idx"] = row_idx + 1
+            new_cache["idx"] = idx + 1
+        else:  # prefill
+            S = positions.shape[1]
+            off = extend_offset
+            if slot_pos is not None:
+                lc = cache["k"].shape[2]
+                if off > 0:
+                    pad = jnp.full((positions.shape[0], lc - off - S), -1,
+                                   jnp.int32)
+                    new_cache["slot_pos"] = jnp.concatenate(
+                        [slot_pos[:, :off], positions, pad], axis=1)
+                elif S >= lc:
+                    last = positions[:, S - lc:]
+                    new_cache["slot_pos"] = jnp.roll(last, S % lc, axis=1)
+                else:
+                    pad = jnp.full((positions.shape[0], lc - S), -1, jnp.int32)
+                    new_cache["slot_pos"] = jnp.concatenate([positions, pad], axis=1)
+            new_cache["idx"] = jnp.int32(off + S)
+    return logits, new_cache
+
+
+def lm_loss(cfg: ModelConfig, logits: jax.Array, labels: jax.Array,
+            mask: jax.Array) -> jax.Array:
+    """Cross-entropy over the (padded) vocab; labels are < vocab_size so
+    padded logit columns never receive probability mass via the label path —
+    they only inflate the partition function, which is fine at init and
+    irrelevant for roofline purposes."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    true = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - true) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,125 @@
+"""Mixture-of-experts block: top-k routing with grouped, capacity-bounded
+scatter dispatch.
+
+Layout: tokens are split into `num_groups` groups (group axis shards over the
+`data` mesh axis). Within each group every (token, choice) pair gets a slot
+`expert * C + position_in_expert` via a cumsum over the one-hot routing
+matrix; overflow beyond capacity C is dropped and the gate weights are
+renormalized over surviving choices (standard capacity-factor dropping).
+
+Expert parallelism is injected from the distribution layer via `dispatch_cs`
+/ `combine_cs` sharding-constraint hooks:
+  EP (num_experts % 16 == 0): expert axis constrained to `model` → GSPMD
+      inserts the dispatch/return all-to-alls.
+  TP (small expert counts): per-expert FFN hidden dim sharded over `model`,
+      dispatch stays local to the data shard.
+
+FLOP note: dispatch/combine are scatters/gathers (no matmul FLOPs), so the
+compiled HLO FLOPs ≈ active-expert FLOPs × capacity_factor, keeping the
+roofline's useful-compute ratio honest (unlike dense all-experts fallbacks).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Identity = lambda x: x
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pick_num_groups(num_tokens: int, data_shards: int, target_group: int = 4096) -> int:
+    """Choose a group count that (a) divides the token count, (b) is a
+    multiple of the data-axis size when possible, (c) keeps groups ≈4k."""
+    g = max(1, num_tokens // target_group)
+    if g >= data_shards:
+        g = (g // data_shards) * data_shards
+    elif num_tokens % data_shards == 0 and num_tokens >= 4 * data_shards:
+        g = data_shards          # decode-sized batches: one group per shard
+    while num_tokens % g:
+        g -= 1
+    return max(1, g)
+
+
+def moe_block(x: jax.Array, params: dict, *, num_experts: int, top_k: int,
+              capacity_factor: float, num_groups: int = 1,
+              dispatch_cs: Callable = Identity, combine_cs: Callable = Identity,
+              compute_dtype=jnp.bfloat16) -> jax.Array:
+    """x: (T, M) token-major. params: router (M, E), w_gate/w_up (E, M, H),
+    w_down (E, H, M). Returns (T, M)."""
+    T, M = x.shape
+    E, K = num_experts, top_k
+    G = num_groups
+    assert T % G == 0, (T, G)
+    Tg = T // G
+    C = max(4, _round_up(int(Tg * K * capacity_factor / E + 0.999), 4))
+    C = min(C, Tg * K)
+
+    # --- routing (fp32) ---
+    logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    top_logits, top_idx = jax.lax.top_k(logits, K)          # (T, K)
+    gates = jax.nn.softmax(top_logits, axis=-1)             # renorm over top-k
+
+    xg = x.reshape(G, Tg, M)
+    idxg = top_idx.reshape(G, Tg * K)
+    gatesg = gates.reshape(G, Tg * K)
+
+    def dispatch_one(xs, idx):
+        # xs (Tg, M); idx (Tg*K,)
+        oh = jax.nn.one_hot(idx, E, dtype=jnp.int32)         # (Tg*K, E)
+        pos = jnp.cumsum(oh, axis=0) - 1                     # running count
+        pos = jnp.sum(pos * oh, axis=-1)                     # (Tg*K,)
+        keep = pos < C
+        dest = jnp.where(keep, idx * C + pos, E * C)         # overflow slot
+        x_rep = jnp.repeat(xs, K, axis=0)                    # (Tg*K, M)
+        buf = jnp.zeros((E * C + 1, M), compute_dtype)
+        buf = buf.at[dest].add(x_rep.astype(compute_dtype))
+        return buf[:-1], dest, keep
+
+    expert_in, dest, keep = jax.vmap(dispatch_one)(xg, idxg)   # (G, E*C, M)
+    expert_in = expert_in.reshape(G, E, C, M)
+    expert_in = dispatch_cs(expert_in)                          # EP all-to-all
+
+    wg = params["w_gate"].astype(compute_dtype)                 # (E, M, H)
+    wu = params["w_up"].astype(compute_dtype)
+    wd = params["w_down"].astype(compute_dtype)                 # (E, H, M)
+    h = jax.nn.silu(jnp.einsum("gecm,emh->gech", expert_in, wg))
+    h = h * jnp.einsum("gecm,emh->gech", expert_in, wu)
+    out = jnp.einsum("gech,ehm->gecm", h, wd)                   # (G, E, C, M)
+    out = combine_cs(out)                                       # return a2a
+
+    out_flat = out.reshape(G, E * C, M)
+
+    def combine_one(buf, dest, keep, gate):
+        # buf (E*C, M); dest/keep/gate (Tg*K,)
+        vals = jnp.take(buf, jnp.minimum(dest, E * C - 1), axis=0)
+        w = gate * keep.astype(gate.dtype)                      # drop overflow
+        denom = jnp.maximum(w.reshape(Tg, K).sum(-1, keepdims=True), 1e-9)
+        y = (vals.astype(jnp.float32).reshape(Tg, K, M)
+             * (w.reshape(Tg, K) / denom)[..., None]).sum(axis=1)
+        return y
+
+    y = jax.vmap(combine_one)(out_flat, dest, keep, gatesg)     # (G, Tg, M)
+    return y.reshape(T, M).astype(x.dtype)
+
+
+def moe_block_reference(x, params, *, num_experts, top_k, **_):
+    """Oracle: dense per-token loop over all experts (no capacity drops).
+    Used by tests to bound the capacity-dropping error of moe_block."""
+    T, M = x.shape
+    logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    top_logits, top_idx = jax.lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(top_logits, axis=-1)
+    xf = x.astype(jnp.float32)
+    wg = params["w_gate"].astype(jnp.float32)
+    wu = params["w_up"].astype(jnp.float32)
+    wd = params["w_down"].astype(jnp.float32)
+    h = jax.nn.silu(jnp.einsum("tm,emh->teh", xf, wg))
+    h = h * jnp.einsum("tm,emh->teh", xf, wu)
+    all_out = jnp.einsum("teh,ehm->tem", h, wd)                 # (T, E, M)
+    sel = jnp.take_along_axis(all_out, top_idx[..., None], axis=1)  # (T, K, M)
+    return (sel * gates[..., None]).sum(axis=1).astype(x.dtype)

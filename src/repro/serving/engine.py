@@ -1,0 +1,256 @@
+"""In-process LLM serving engine — the in-database inference backend that
+the PREDICT operator drives (DESIGN.md §2: iPDB's "local model executor" on
+a TPU pod).
+
+Features mapped from the paper's optimizations:
+  * batched prefill + decode with jit-compiled bucketed steps
+  * grammar-constrained decoding (per-step masks from serving.grammar,
+    applied by the fused constrained_logits kernel or the jnp ref)
+  * shared-prefix KV reuse: the instruction prefix of a marshaled prompt is
+    prefilled once, broadcast across the row batch, and extended — the
+    compute-side realization of multi-row prompt marshaling (§6.2)
+  * continuous batching (scheduler.py) with per-row cache indices
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as MDL
+from repro.models.config import ModelConfig
+from repro.serving import tokenizer as TOK
+from repro.serving.grammar import JsonGrammar
+
+NEG_INF = -1e30
+
+
+def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 4095) // 4096) * 4096
+
+
+@dataclasses.dataclass
+class GenStats:
+    calls: int = 0
+    input_tokens: int = 0
+    output_tokens: int = 0
+    prefill_tokens: int = 0        # actually prefit through the model
+    decode_steps: int = 0
+    wall_s: float = 0.0
+    prefix_hits: int = 0
+
+    def add(self, other: "GenStats") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+
+@dataclasses.dataclass
+class GenResult:
+    texts: List[str]
+    stats: GenStats
+
+
+class InferenceEngine:
+    """Single-host engine around one model. Tiny configs run the real JAX
+    forward on CPU; the same code drives full configs on a TPU mesh (the
+    steps come from launch.steps builders in that path)."""
+
+    def __init__(self, cfg: ModelConfig, params=None, *,
+                 seed: int = 0, max_len: int = 1024,
+                 use_pallas_sampler: bool = False):
+        assert cfg.supports_decode, f"{cfg.name} cannot generate"
+        self.cfg = cfg
+        self.max_len = max_len
+        self.params = params if params is not None else \
+            MDL.init_params(cfg, jax.random.PRNGKey(seed))
+        self.use_pallas_sampler = use_pallas_sampler
+        self._prefill_cache: Dict[Tuple[int, int, int], object] = {}
+        self._decode_fns: Dict[int, object] = {}
+        self._prefix_kv: Dict[Tuple[str, int], Tuple[dict, int]] = {}
+        self._rng = np.random.default_rng(seed)
+
+    # ----------------------------- compiled steps -----------------------------
+    def _prefill_fn(self, batch: int, length: int, offset: int):
+        key = (batch, length, offset)
+        if key not in self._prefill_cache:
+            cfg = self.cfg
+
+            def fn(params, tokens, positions, cache):
+                logits, cache = MDL.forward(
+                    cfg, params, {"tokens": tokens, "positions": positions},
+                    mode="prefill", cache=cache, remat=False,
+                    extend_offset=offset, last_only=True)
+                return logits[:, -1], cache
+
+            self._prefill_cache[key] = jax.jit(fn)
+        return self._prefill_cache[key]
+
+    def _decode_fn(self):
+        if "fn" not in self._decode_fns:
+            cfg = self.cfg
+
+            def fn(params, tokens, positions, cache):
+                logits, cache = MDL.forward(
+                    cfg, params, {"tokens": tokens, "positions": positions},
+                    mode="decode", cache=cache, remat=False)
+                return logits[:, 0], cache
+
+            self._decode_fns["fn"] = jax.jit(fn, donate_argnums=(3,))
+        return self._decode_fns["fn"]
+
+    # ------------------------------- prefill ----------------------------------
+    def _prefill(self, token_lists: List[List[int]], *, offset: int = 0,
+                 pos_offset: Optional[int] = None,
+                 cache: Optional[dict] = None, row_idx_mode: bool = False):
+        """offset = cache slot offset (bucketed prefix length);
+        pos_offset = absolute position offset (REAL prefix length — RoPE
+        positions must not jump over the prefix bucket padding)."""
+        if pos_offset is None:
+            pos_offset = offset
+        B = len(token_lists)
+        L = _bucket(max(len(t) for t in token_lists))
+        toks = np.full((B, L), TOK.PAD_ID, np.int32)
+        pos = np.zeros((B, L), np.int32)
+        for i, t in enumerate(token_lists):
+            pad = L - len(t)
+            toks[i, pad:] = t                                # left padding
+            pos[i] = np.arange(L) - pad + pos_offset
+            pos[i, :pad] = -1      # pads masked (never overlap the prefix)
+        if cache is None:
+            cache = MDL.init_cache(self.cfg, B, self.max_len)
+            if row_idx_mode:
+                cache["row_idx"] = jnp.zeros((B,), jnp.int32)
+        logits, cache = self._prefill_fn(B, L, offset)(
+            self.params, jnp.asarray(toks), jnp.asarray(pos), cache)
+        if "row_idx" in cache or row_idx_mode:
+            cache = dict(cache)
+            cache["row_idx"] = jnp.full((B,), offset + L, jnp.int32)
+        lens = np.array([pos_offset + len(t) for t in token_lists], np.int32)
+        return np.asarray(logits, np.float32), cache, lens, B * L
+
+    # ----------------------------- shared prefix ------------------------------
+    def prefix_cache_for(self, prefix_text: str, batch: int):
+        """Prefill the shared instruction prefix ONCE (batch=1), memoize,
+        broadcast to the row batch. Returns (cache, offset, stats_delta)."""
+        ids = TOK.encode(prefix_text)
+        key = (prefix_text, self.max_len)
+        hit = key in self._prefix_kv
+        if not hit:
+            _, cache1, lens, pre_toks = self._prefill([ids])
+            # keep the memoized prefix KV on host: downstream decode steps
+            # donate their cache buffers, which must never alias this copy
+            self._prefix_kv[key] = (
+                jax.tree.map(lambda x: np.asarray(x), cache1),
+                int(np.asarray(cache1["idx"])), len(ids))
+        cache1, off, real_len = self._prefix_kv[key]
+
+        def rep(x):
+            x = jnp.asarray(x)
+            if x.ndim >= 2 and x.shape[1] == 1:     # (L, 1, ...) layer caches
+                return jnp.repeat(x, batch, axis=1)
+            if x.ndim >= 1 and x.shape[0] == 1:     # (1, lc) slot_pos
+                return jnp.repeat(x, batch, axis=0)
+            return x
+        cache = {k: (rep(v) if k not in ("idx",) else v)
+                 for k, v in cache1.items()}
+        return cache, off, real_len, (0 if hit else len(ids)), hit
+
+    # ------------------------------- generate ---------------------------------
+    def generate(self, prompts: Sequence[str], *,
+                 grammar: Optional[JsonGrammar] = None,
+                 grammars: Optional[List[JsonGrammar]] = None,
+                 max_new_tokens: int = 256, temperature: float = 0.0,
+                 shared_prefix: str = "") -> GenResult:
+        """Generate for a batch of prompts. If shared_prefix is given it is
+        prefilled once and KV-reused across rows (prompts are then the
+        suffixes). Grammar-constrained when grammar(s) provided."""
+        t0 = time.time()
+        stats = GenStats(calls=1)
+        B = len(prompts)
+        gs = grammars or ([grammar] * B if grammar else [None] * B)
+        states = [g.init_state() if g else None for g in gs]
+
+        offset = 0
+        pos_offset = None
+        cache = None
+        if shared_prefix:
+            cache, offset, pos_offset, new_prefix_toks, hit = \
+                self.prefix_cache_for(shared_prefix, B)
+            stats.prefill_tokens += new_prefix_toks
+            stats.prefix_hits += int(hit)
+            stats.input_tokens += TOK.count_tokens(shared_prefix)
+
+        token_lists = [TOK.encode(p, bos=not shared_prefix) for p in prompts]
+        stats.input_tokens += sum(len(t) for t in token_lists)
+        logits, cache, lens, pre = self._prefill(
+            token_lists, offset=offset, pos_offset=pos_offset,
+            cache=cache, row_idx_mode=True)
+        stats.prefill_tokens += pre
+
+        decode = self._decode_fn()
+        out_tokens: List[List[int]] = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        positions = lens.copy()
+
+        for step in range(max_new_tokens):
+            toks = self._sample(logits, gs, states, temperature)
+            for i in range(B):
+                if done[i]:
+                    continue
+                t = int(toks[i])
+                if gs[i] is not None:
+                    states[i] = gs[i].advance(states[i], t)
+                    if t != TOK.EOS_ID:
+                        out_tokens[i].append(t)
+                    if gs[i].done(states[i]):
+                        done[i] = True
+                else:
+                    if t == TOK.EOS_ID:
+                        done[i] = True
+                    else:
+                        out_tokens[i].append(t)
+            stats.decode_steps += 1
+            stats.output_tokens += int((~done).sum() + done.sum() * 0)
+            if done.all():
+                break
+            lg, cache = decode(self.params, jnp.asarray(toks[:, None]),
+                               jnp.asarray(positions[:, None]), cache)
+            logits = np.asarray(lg, np.float32)
+            positions += 1
+
+        stats.wall_s = time.time() - t0
+        return GenResult([TOK.decode(t) for t in out_tokens], stats)
+
+    # ------------------------------- sampling ---------------------------------
+    def _sample(self, logits: np.ndarray, gs, states, temperature: float
+                ) -> np.ndarray:
+        B, V = logits.shape
+        mask = np.ones((B, V), np.int8)
+        for i, (g, st) in enumerate(zip(gs, states)):
+            if g is not None:
+                m = g.mask(st)
+                mask[i, :] = 0
+                mask[i, :len(m)] = m
+        noise = None
+        if temperature > 0:
+            u = self._rng.uniform(1e-9, 1.0, size=(B, V))
+            noise = -np.log(-np.log(u))
+        if self.use_pallas_sampler:
+            from repro.kernels import ops as KOPS
+            return np.asarray(KOPS.constrained_sample(
+                jnp.asarray(logits), jnp.asarray(mask),
+                None if noise is None else jnp.asarray(noise),
+                temperature=max(temperature, 1e-6) if temperature > 0 else 1.0,
+                block_v=256, interpret=True))
+        x = logits / (temperature if temperature > 0 else 1.0)
+        if noise is not None:
+            x = x + noise
+        x = np.where(mask != 0, x, NEG_INF)
+        return np.argmax(x, axis=-1).astype(np.int32)

@@ -1,0 +1,139 @@
+"""Slot-based continuous batching on top of InferenceEngine.
+
+A fixed decode batch of `num_slots` sequences runs lock-step decode ticks;
+finished slots are immediately refilled by prefilling queued requests into
+the slot's cache rows (per-row cache indices make ragged fill levels safe).
+This is the serving analog of the paper's §6.3 parallel-call executor: the
+"worker pool" is the decode batch, and slot eviction doubles as straggler
+mitigation (a request exceeding its token budget is cut off and re-queued
+or failed without stalling the batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as MDL
+from repro.serving import tokenizer as TOK
+from repro.serving.engine import GenStats, InferenceEngine, NEG_INF
+from repro.serving.grammar import JsonGrammar
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: str
+    grammar: Optional[JsonGrammar] = None
+    max_new_tokens: int = 256
+    rid: int = -1
+    # filled on completion:
+    text: Optional[str] = None
+    error: Optional[str] = None
+
+
+class ContinuousBatcher:
+    def __init__(self, engine: InferenceEngine, num_slots: int = 8):
+        self.engine = engine
+        self.num_slots = num_slots
+        self.stats = GenStats()
+
+    def run(self, requests: Sequence[Request], *, temperature: float = 0.0
+            ) -> List[Request]:
+        """Process all requests to completion; returns them (order kept)."""
+        t0 = time.time()
+        eng = self.engine
+        reqs = list(requests)
+        for i, r in enumerate(reqs):
+            r.rid = i
+        queue = list(reqs)
+        B = self.num_slots
+
+        cache = MDL.init_cache(eng.cfg, B, eng.max_len)
+        cache["row_idx"] = jnp.zeros((B,), jnp.int32)
+        active: List[Optional[Request]] = [None] * B
+        states = [None] * B
+        outs: List[List[int]] = [[] for _ in range(B)]
+        budgets = np.zeros(B, np.int64)
+        positions = np.zeros(B, np.int32)
+        logits = np.full((B, eng.cfg.padded_vocab), NEG_INF, np.float32)
+
+        def fill_slot(b: int, req: Request, cache):
+            ids = TOK.encode(req.prompt)
+            lg, c1, lens, pre = eng._prefill([ids], row_idx_mode=True)
+            self.stats.prefill_tokens += pre
+            self.stats.input_tokens += len(ids)
+            # splice sequence 0 of c1 into slot b of the live cache
+            new = dict(cache)
+            for k, v in c1.items():
+                if k == "idx":
+                    continue
+                tgt = jnp.asarray(cache[k])
+                src = jnp.asarray(v)
+                if k in ("k", "v", "conv", "h"):          # (L, B, ...)
+                    new[k] = tgt.at[:, b].set(src[:, 0])
+                elif k in ("slot_pos", "row_idx"):        # (B, ...)
+                    new[k] = tgt.at[b].set(src[0])
+            active[b] = req
+            states[b] = req.grammar.init_state() if req.grammar else None
+            outs[b] = []
+            budgets[b] = req.max_new_tokens
+            positions[b] = lens[0]
+            logits[b] = lg[0][:logits.shape[1]]
+            return new
+
+        decode = eng._decode_fn()
+        done_count = 0
+        ticks = 0
+        while done_count < len(reqs):
+            # refill free slots
+            for b in range(B):
+                if active[b] is None and queue:
+                    cache = fill_slot(b, queue.pop(0), cache)
+            live = [b for b in range(B) if active[b] is not None]
+            if not live:
+                break
+
+            gs = [active[b].grammar if active[b] else None for b in range(B)]
+            toks = eng._sample(logits, gs, states, temperature)
+            for b in live:
+                r = active[b]
+                t = int(toks[b])
+                if r.grammar is not None:
+                    states[b] = r.grammar.advance(states[b], t)
+                    if t != TOK.EOS_ID:
+                        outs[b].append(t)
+                    finished = r.grammar.done(states[b])
+                else:
+                    finished = t == TOK.EOS_ID
+                    if not finished:
+                        outs[b].append(t)
+                budgets[b] -= 1
+                self.stats.output_tokens += 1
+                if budgets[b] <= 0 and not finished:
+                    r.error = "token budget exceeded (slot evicted)"
+                    finished = True
+                if finished:
+                    r.text = TOK.decode(outs[b])
+                    active[b] = None
+                    done_count += 1
+                    logits[b] = NEG_INF
+
+            if done_count >= len(reqs):
+                break
+            lg, cache = decode(eng.params, jnp.asarray(toks[:, None]),
+                               jnp.asarray(positions[:, None]), cache)
+            lgn = np.asarray(lg, np.float32)
+            for b in range(B):
+                if active[b] is not None:
+                    logits[b] = lgn[b]
+            positions += 1
+            ticks += 1
+
+        self.stats.decode_steps += ticks
+        self.stats.calls += 1
+        self.stats.wall_s += time.time() - t0
+        return reqs

@@ -1,0 +1,134 @@
+"""Sharded checkpointing with elastic restore.
+
+Layout: <dir>/step_<N>/
+    manifest.json            — tree structure, shapes, dtypes, step
+    shard_<i>_of_<k>.npz     — flat leaves, each leaf split on axis 0 into
+                               k host shards (k = number of writer hosts)
+
+Properties needed at 1000+ nodes:
+  * per-host shard files (no single-writer bottleneck); manifest written
+    LAST and atomically (tmp+rename) → a crash mid-write never yields a
+    readable-but-corrupt checkpoint (restore only trusts manifested steps)
+  * elastic restore: the reader reassembles logical arrays from any k and
+    re-device_puts with the CURRENT mesh's shardings — checkpoint layout is
+    independent of mesh shape, so scaling 256→512 chips (or mesh reshapes)
+    is a restore, not a migration
+  * async save: serialization happens on a snapshot copy so the train loop
+    continues (here: thread handed a host copy)
+  * retention: keep_last N
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(p), v) for p, v in leaves], treedef
+
+
+def save(ckpt_dir: str, step: int, state: PyTree, *, num_shards: int = 1,
+         keep_last: int = 3) -> Path:
+    """Synchronous sharded save. Returns the checkpoint path."""
+    root = Path(ckpt_dir)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=str(root)))
+    leaves, _ = _flatten(state)
+
+    manifest = {"step": step, "num_shards": num_shards, "leaves": []}
+    shard_payloads: List[Dict[str, np.ndarray]] = [dict() for _ in range(num_shards)]
+    for idx, (name, v) in enumerate(leaves):
+        a = np.asarray(v)
+        key = f"leaf_{idx}"
+        manifest["leaves"].append({
+            "name": name, "key": key, "shape": list(a.shape),
+            "dtype": str(a.dtype),
+            "sharded": bool(a.ndim > 0 and a.shape[0] % num_shards == 0
+                            and num_shards > 1)})
+        if manifest["leaves"][-1]["sharded"]:
+            parts = np.split(a, num_shards, axis=0)
+            for s, p in enumerate(parts):
+                shard_payloads[s][key] = p
+        else:
+            shard_payloads[0][key] = a
+    for s, payload in enumerate(shard_payloads):
+        np.savez(tmp / f"shard_{s}_of_{num_shards}.npz", **payload)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+
+    # retention
+    steps = sorted(p for p in root.glob("step_*") if (p / "manifest.json").exists())
+    for old in steps[:-keep_last]:
+        shutil.rmtree(old, ignore_errors=True)
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, state: PyTree, **kw) -> threading.Thread:
+    """Snapshot to host memory, then write on a background thread."""
+    host_state = jax.tree.map(lambda x: np.asarray(x), state)
+    th = threading.Thread(target=save, args=(ckpt_dir, step, host_state),
+                          kwargs=kw, daemon=True)
+    th.start()
+    return th
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    root = Path(ckpt_dir)
+    if not root.exists():
+        return None
+    steps = []
+    for p in root.glob("step_*"):
+        if (p / "manifest.json").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: PyTree, *,
+            shardings: Optional[PyTree] = None) -> PyTree:
+    """Restore into the structure of `like` (specs or arrays). If
+    `shardings` given, leaves are device_put with them — this is the
+    elastic path (any current mesh)."""
+    path = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    k = manifest["num_shards"]
+    shards = [np.load(path / f"shard_{s}_of_{k}.npz") for s in range(k)]
+
+    by_name: Dict[str, np.ndarray] = {}
+    for leaf in manifest["leaves"]:
+        if leaf["sharded"]:
+            a = np.concatenate([shards[s][leaf["key"]] for s in range(k)],
+                               axis=0)
+        else:
+            a = shards[0][leaf["key"]]
+        by_name[leaf["name"]] = a
+
+    leaves, treedef = _flatten(like)
+    out = []
+    flat_sh = jax.tree.leaves(shardings) if shardings is not None else \
+        [None] * len(leaves)
+    for (name, spec), sh in zip(leaves, flat_sh):
+        if name not in by_name:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        a = by_name[name]
+        want_shape = tuple(spec.shape)
+        if tuple(a.shape) != want_shape:
+            raise ValueError(f"shape mismatch for {name}: "
+                             f"{a.shape} vs {want_shape}")
+        a = a.astype(spec.dtype)
+        out.append(jax.device_put(a, sh) if sh is not None else jnp.asarray(a))
+    return treedef.unflatten(out)

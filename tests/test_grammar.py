@@ -1,0 +1,77 @@
+"""Grammar-forced generation: property tests (hypothesis) that EVERY path
+through the automaton yields typed, json.loads-able output — the paper's
+§5.2 schema-compliance claim as a mechanical property."""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.grammar import Field, JsonGrammar
+from repro.serving.tokenizer import EOS_ID, decode
+
+TYPES = ["VARCHAR", "INTEGER", "DOUBLE", "BOOLEAN", "DATETIME"]
+
+
+@settings(max_examples=120, deadline=None)
+@given(
+    types=st.lists(st.sampled_from(TYPES), min_size=1, max_size=4),
+    rows=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_random_walk_always_valid_json(types, rows, seed):
+    fields = [Field(f"c{i}", t) for i, t in enumerate(types)]
+    g = JsonGrammar(fields, num_rows=rows, max_str=6)
+    rng = np.random.default_rng(seed)
+    st_ = g.init_state()
+    out = []
+    for _ in range(4000):
+        if g.done(st_):
+            break
+        m = g.mask(st_)
+        choices = np.nonzero(m)[0]
+        assert len(choices) > 0, f"dead state after {decode(out)!r}"
+        tok = int(rng.choice(choices))
+        if tok != EOS_ID:
+            out.append(tok)
+        st_ = g.advance(st_, tok)
+    assert g.done(st_)
+    v = json.loads(decode(out))
+    objs = [v] if rows == 1 else v
+    if rows > 1:
+        assert isinstance(v, list) and len(v) == rows
+    for o in objs:
+        assert set(o.keys()) == {f.name for f in fields}
+        for f in fields:
+            x = o[f.name]
+            if f.type == "INTEGER":
+                assert isinstance(x, int) and not isinstance(x, bool)
+            elif f.type == "DOUBLE":
+                assert isinstance(x, (int, float))
+            elif f.type == "BOOLEAN":
+                assert isinstance(x, bool)
+            else:
+                assert isinstance(x, str)
+
+
+def test_disallowed_token_raises():
+    g = JsonGrammar([Field("a", "INTEGER")])
+    s = g.init_state()
+    with pytest.raises(ValueError):
+        g.advance(s, ord("x"))       # first token must be '{'
+
+
+def test_untrained_model_always_schema_compliant():
+    """The end-to-end §5.2 claim: a RANDOM-weight model under the grammar
+    still emits parseable, typed rows."""
+    import repro.configs as C
+    from repro.serving.engine import InferenceEngine
+    cfg = C.get_smoke_config("olmo-1b").replace(vocab_size=259)
+    eng = InferenceEngine(cfg, max_len=192, seed=3)
+    g = JsonGrammar([Field("vendor", "VARCHAR"), Field("ok", "BOOLEAN")],
+                    max_str=8)
+    res = eng.generate(["extract vendor"] * 2, grammar=g, max_new_tokens=64,
+                       temperature=1.0)
+    for t in res.texts:
+        v = json.loads(t)
+        assert isinstance(v["vendor"], str) and isinstance(v["ok"], bool)

@@ -1,0 +1,172 @@
+"""Per-kernel allclose sweeps (interpret=True) against the ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _split(n):
+    return jax.random.split(KEY, n)
+
+
+# ------------------------------ flash attention -------------------------------
+@pytest.mark.parametrize("B,Sq,H,KV,D", [
+    (1, 65, 4, 2, 16), (2, 128, 4, 4, 32), (1, 200, 8, 1, 64),
+    (2, 96, 4, 2, 80),          # hubert head_dim (pads to 128)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window,prefix", [
+    (True, 0, 0), (True, 17, 0), (False, 0, 0), (True, 0, 11),
+])
+def test_flash_attention(B, Sq, H, KV, D, dtype, causal, window, prefix):
+    ks = _split(3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sq, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sq, KV, D), dtype)
+    pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    out = ops.flash_attention(q, k, v, pos, pos, causal=causal, window=window,
+                              prefix_len=prefix, block_q=64, block_kv=64,
+                              interpret=True)
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, D).transpose(0, 2, 3, 1, 4).reshape(B * KV, G, Sq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, Sq, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, Sq, D)
+    pr = jnp.repeat(pos, KV, axis=0)
+    r = ref.flash_attention_ref(qr, kr, vr, pr, pr, causal=causal,
+                                window=window, prefix_len=prefix)
+    r = r.reshape(B, KV, G, Sq, D).transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+# ------------------------------ decode attention ------------------------------
+@pytest.mark.parametrize("B,H,KV,D,L,fill", [
+    (2, 4, 2, 32, 96, 50), (1, 8, 1, 64, 128, 128), (3, 4, 4, 80, 64, 10),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, H, KV, D, L, fill, dtype):
+    ks = _split(3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kc = jax.random.normal(ks[1], (B, L, KV, D), dtype)
+    vc = jax.random.normal(ks[2], (B, L, KV, D), dtype)
+    spos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    spos = jnp.where(spos < fill, spos, -1)
+    qpos = jnp.full((B,), fill - 1, jnp.int32)
+    out = ops.decode_attention(q, kc, vc, spos, qpos, block_l=32,
+                               interpret=True)
+    G = H // KV
+    qr = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    kr = kc.transpose(0, 2, 1, 3).reshape(B * KV, L, D)
+    vr = vc.transpose(0, 2, 1, 3).reshape(B * KV, L, D)
+    r = ref.decode_attention_ref(
+        qr, kr, vr, jnp.repeat(spos, KV, axis=0),
+        jnp.repeat(qpos[:, None], KV, axis=0).reshape(B * KV, 1))
+    r = r.reshape(B, KV, G, D).reshape(B, H, D)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+# --------------------------------- MoE gmm ------------------------------------
+@pytest.mark.parametrize("T,M,N,E,seed", [
+    (64, 32, 48, 4, 0), (130, 64, 64, 8, 1), (33, 96, 16, 3, 2),
+    (16, 32, 32, 5, 3),
+])
+def test_gmm(T, M, N, E, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    gs = np.zeros(E, np.int64)
+    r = np.random.default_rng(seed)
+    for _ in range(T):
+        gs[r.integers(0, E)] += 1
+    x = jax.random.normal(k2, (T, M))
+    w = jax.random.normal(k3, (E, M, N)) * 0.1
+    out = ops.gmm(x, w, jnp.asarray(gs), block_m=16, block_n=16, block_k=32,
+                  interpret=True)
+    rr = ref.gmm_ref(x, w, jnp.asarray(gs))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rr),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ------------------------------ selective scan --------------------------------
+@pytest.mark.parametrize("Bz,S,Di,N", [(1, 48, 32, 8), (2, 100, 24, 16),
+                                       (2, 33, 128, 4)])
+def test_selective_scan(Bz, S, Di, N):
+    ks = _split(5)
+    u = jax.random.normal(ks[0], (Bz, S, Di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, S, Di))) * 0.2
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, N)) * 0.3)
+    B = jax.random.normal(ks[3], (Bz, S, N)) * 0.5
+    C = jax.random.normal(ks[4], (Bz, S, N)) * 0.5
+    D = jnp.ones((Di,))
+    y, h = ops.selective_scan(u, dt, A, B, C, D, chunk=16, block_d=16,
+                              interpret=True)
+    yr, hr = ref.selective_scan_ref(u, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-4,
+                               rtol=1e-4)
+
+
+# --------------------------- constrained sampling -----------------------------
+@pytest.mark.parametrize("B,V,temp", [(2, 512, 1.0), (4, 1000, 0.5),
+                                      (1, 300, 2.0)])
+def test_constrained_sample(B, V, temp):
+    ks = _split(3)
+    logits = jax.random.normal(ks[0], (B, V))
+    mask = jax.random.uniform(ks[1], (B, V)) > 0.6
+    mask = mask.at[:, 7].set(True)          # never fully masked
+    noise = jax.random.gumbel(ks[2], (B, V))
+    out = ops.constrained_sample(logits, mask, noise, temperature=temp,
+                                 block_v=128, interpret=True)
+    r = ref.constrained_sample_ref(logits, mask, noise, temperature=temp)
+    assert np.array_equal(np.asarray(out), np.asarray(r))
+    # sampled tokens always satisfy the mask
+    assert bool(np.all(np.asarray(mask)[np.arange(B), np.asarray(out)]))
+
+
+def test_constrained_sample_greedy():
+    logits = jnp.asarray([[1.0, 5.0, 3.0, -2.0]])
+    mask = jnp.asarray([[1, 0, 1, 1]], jnp.int8)
+    out = ops.constrained_sample(logits, mask, None, block_v=4, interpret=True)
+    assert int(out[0]) == 2                  # best *allowed* token
+
+
+# -------------------------- jnp flash (model layer) ----------------------------
+def test_model_flash_vs_reference_grad():
+    from repro.models import layers as L
+    B, S, H, KV, D = 2, 50, 4, 2, 16
+    ks = _split(3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    f = lambda *a: L.flash_attention(*a, pos, pos, True, 13, 0, 32, 32).sum()
+    r = lambda *a: L.reference_attention(*a, pos, pos, True, 13, 0).sum()
+    gf = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                   rtol=1e-4)
+
+
+# ------------------------- banded SWA flash (§Perf opt A) ----------------------
+@pytest.mark.parametrize("win,bq,bkv", [(16, 32, 32), (33, 32, 64),
+                                        (100, 64, 32)])
+def test_banded_flash_matches_reference(win, bq, bkv):
+    from repro.models import layers as L
+    B, S, H, KV, D = 2, 300, 4, 2, 16
+    ks = _split(3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    a = L.flash_attention(q, k, v, pos, pos, True, win, 0, bq, bkv,
+                          False, True)
+    b = L.reference_attention(q, k, v, pos, pos, True, win, 0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)

@@ -1,0 +1,205 @@
+"""PREDICT operator invariants + optimizer-rule tests (the paper's §6
+optimizations), including plan-equivalence properties: every optimization
+must preserve query results while reducing calls/tokens."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.database import IPDB
+from repro.core.predict import makespan, parse_structured
+from repro.relational.table import Table
+
+
+def make_db(n_rows=40, dup_every=4, **oracle_kw):
+    """Products with duplicated names every `dup_every` rows."""
+    rows = [{"id": i, "name": f"prod{i % (n_rows // dup_every)}",
+             "category": "CPU" if i % 2 == 0 else "PSU",
+             "price": float(50 + i)} for i in range(n_rows)]
+    db = IPDB()
+    db.register_table("Product", Table.from_rows(rows))
+
+    def orc(instruction, rws):
+        return [{"vendor": "Intel" if str(r.get("name", "")).endswith("0")
+                 else "AMD",
+                 "score": len(str(r.get("name", "")))} for r in rws]
+
+    db.register_oracle("orc", orc, **oracle_kw)
+    db.sql("CREATE LLM MODEL m PATH 'oracle:orc' ON PROMPT")
+    return db
+
+
+Q_SELECT = ("SELECT name FROM Product WHERE "
+            "LLM m (PROMPT 'get {vendor VARCHAR} of {{name}}') = 'Intel'")
+
+
+def test_dedup_reduces_calls_same_result():
+    db1 = make_db()
+    db1.set_option("use_dedup", True)
+    db1.set_option("use_batching", False)
+    r1 = db1.sql(Q_SELECT)
+
+    db2 = make_db()
+    db2.set_option("use_dedup", False)
+    db2.set_option("use_batching", False)
+    r2 = db2.sql(Q_SELECT)
+
+    assert sorted(r1.table.column("name")) == sorted(r2.table.column("name"))
+    assert r1.stats.llm_calls == 10          # unique names
+    assert r2.stats.llm_calls == 40
+    assert r1.stats.tokens < r2.stats.tokens
+
+
+def test_marshaling_reduces_calls_same_result():
+    db1 = make_db()
+    db1.set_option("use_dedup", False)
+    db1.set_option("batch_size", 16)
+    r1 = db1.sql(Q_SELECT)
+
+    db2 = make_db()
+    db2.set_option("use_dedup", False)
+    db2.set_option("use_batching", False)
+    r2 = db2.sql(Q_SELECT)
+
+    assert sorted(r1.table.column("name")) == sorted(r2.table.column("name"))
+    assert r1.stats.llm_calls == math.ceil(40 / 16)
+    assert r2.stats.llm_calls == 40
+    assert r1.stats.tokens < r2.stats.tokens    # amortized instructions
+
+
+def test_pullup_reduces_calls_same_result():
+    q = ("SELECT name FROM Product WHERE "
+         "LLM m (PROMPT 'get {vendor VARCHAR} of {{name}}') = 'Intel' "
+         "AND category = 'CPU'")
+    db1 = make_db()
+    db1.set_option("use_batching", False)
+    db1.set_option("use_dedup", False)
+    r1 = db1.sql(q)
+
+    db2 = make_db()
+    db2.set_option("use_batching", False)
+    db2.set_option("use_dedup", False)
+    db2.set_option("enable_pullup", False)
+    r2 = db2.sql(q)
+
+    assert sorted(r1.table.column("name")) == sorted(r2.table.column("name"))
+    assert r1.stats.llm_calls == 20            # CPU rows only
+    assert r2.stats.llm_calls == 40            # inference before filter
+    assert r1.stats.sim_latency_s < r2.stats.sim_latency_s
+
+
+def test_merge_predicts_same_result():
+    q = ("SELECT name, LLM m (PROMPT 'get {vendor VARCHAR} of {{name}}') AS v, "
+         "LLM m (PROMPT 'get {score INTEGER} of {{name}}') AS s FROM Product")
+    db1 = make_db()
+    r1 = db1.sql(q)
+    db2 = make_db()
+    db2.set_option("enable_merge", False)
+    r2 = db2.sql(q)
+    assert r1.table.rows() == r2.table.rows()
+    assert r1.stats.llm_calls < r2.stats.llm_calls
+
+
+def test_retry_and_fallback_on_malformed():
+    db = make_db(n_rows=8, malform_rate=0.6)
+    db.set_option("use_dedup", False)
+    r = db.sql("SELECT name, LLM m (PROMPT 'get {vendor VARCHAR} of {{name}}') "
+               "AS v FROM Product")
+    # degraded output still schema-complete: every row present, column typed
+    assert len(r.table) == 8
+    assert r.stats.retries > 0 or r.stats.batch_fallbacks > 0
+
+
+def test_refusal_degrades_gracefully():
+    db = make_db(n_rows=6, refusal_rate=1.0)
+    r = db.sql("SELECT LLM m (PROMPT 'get {vendor VARCHAR} of {{name}}') AS v "
+               "FROM Product")
+    assert len(r.table) == 6                 # NULLs, not a crashed pipeline
+    assert all(v is None for v in r.table.column("v"))
+
+
+def test_parse_structured_tolerates_prose():
+    s = 'Sure, here you go: {"a": 3, "b": "x"} hope that helps'
+    out = parse_structured(s, [("a", "INTEGER"), ("b", "VARCHAR")], 1)
+    assert out == [{"a": 3, "b": "x"}]
+    assert parse_structured("no json here", [("a", "INTEGER")], 1) is None
+    # type coercion
+    out = parse_structured('{"a": "12", "b": 3}', [("a", "INTEGER"),
+                                                   ("b", "VARCHAR")], 1)
+    assert out == [{"a": 12, "b": "3"}]
+
+
+def test_makespan_model():
+    # 10 unit calls on 1 worker = 10s; on 10 workers = 1s
+    assert makespan([1.0] * 10, 1) == pytest.approx(10.0)
+    assert makespan([1.0] * 10, 10) == pytest.approx(1.0)
+    # rate limit dominates: 60 rpm → 1 call/s regardless of workers
+    assert makespan([0.1] * 10, 100, rpm=60.0) == pytest.approx(9.1)
+
+
+def test_semantic_select_vs_join_ordering():
+    """PK-side semantic select: pulled above the join it costs distinct(PK
+    ∩ join) calls; FK join eliminates childless PK rows (paper §7.9)."""
+    pk = [{"pid": i, "desc": f"desc{i}"} for i in range(20)]
+    fk = [{"fid": i, "pid": i % 5, "txt": f"t{i}"} for i in range(40)]
+    db = IPDB()
+    db.register_table("P", Table.from_rows(pk))
+    db.register_table("F", Table.from_rows(fk))
+    db.register_oracle("orc", lambda ins, rows: [
+        {"flag": str(r.get("desc", "")).endswith(("1", "2", "3"))}
+        for r in rows])
+    db.sql("CREATE LLM MODEL m PATH 'oracle:orc' ON PROMPT")
+    db.set_option("use_batching", False)
+    q = ("SELECT txt FROM P JOIN F ON pid = pid WHERE "
+         "LLM m (PROMPT 'check {flag BOOLEAN} of {{desc}}') = TRUE")
+    r = db.sql(q)
+    # only 5 distinct pids survive the FK join → ≤5 calls with the rule on
+    assert r.stats.llm_calls <= 5
+    db2 = IPDB()
+    db2.register_table("P", Table.from_rows(pk))
+    db2.register_table("F", Table.from_rows(fk))
+    db2.register_oracle("orc", lambda ins, rows: [
+        {"flag": str(r.get("desc", "")).endswith(("1", "2", "3"))}
+        for r in rows])
+    db2.sql("CREATE LLM MODEL m PATH 'oracle:orc' ON PROMPT")
+    db2.set_option("use_batching", False)
+    db2.set_option("enable_join_order", False)
+    db2.set_option("use_dedup", False)
+    r2 = db2.sql(q)
+    assert sorted(r.table.column("txt")) == sorted(r2.table.column("txt"))
+    assert r.stats.llm_calls < r2.stats.llm_calls
+
+
+def test_select_ordering_cheaper_first():
+    """§7.10: two stacked semantic selects are ordered by input size."""
+    rows = [{"title": f"t{i}", "plot": "p" * 200 + str(i)} for i in range(12)]
+    db = IPDB()
+    db.register_table("Movie", Table.from_rows(rows))
+    calls = {"title": 0, "plot": 0, "order": []}
+
+    def orc(instruction, rws):
+        out = []
+        for r in rws:
+            if "plot" in r:
+                calls["plot"] += len(rws)
+                calls["order"].append("plot")
+                out.append({"genre": "drama"})
+            else:
+                calls["title"] += 1
+                calls["order"].append("title")
+                out.append({"lang": "en" if r["title"].endswith(("1", "2"))
+                            else "fr"})
+        return out
+
+    db.register_oracle("orc", orc)
+    db.sql("CREATE LLM MODEL m PATH 'oracle:orc' ON PROMPT")
+    db.set_option("use_batching", False)
+    r = db.sql("SELECT title FROM Movie WHERE "
+               "LLM m (PROMPT 'genre {genre VARCHAR} of {{plot}}') = 'drama' "
+               "AND LLM m (PROMPT 'lang {lang VARCHAR} of {{title}}') = 'en'")
+    assert len(r.table) == 3            # t1, t2, t11
+    # title-based select (short inputs) must run first
+    assert calls["order"][0] == "title"
+    # plot predict only sees the 3 surviving rows
+    assert calls["plot"] <= 3

@@ -1,0 +1,109 @@
+"""Relational engine: parser, expressions, joins, group-by + hypothesis
+property tests of operator semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.database import IPDB
+from repro.relational.expr import BinOp, Col, Lit
+from repro.relational.parser import parse_sql, SelectStmt, CreateModel
+from repro.relational.table import Table
+
+
+def db_with(tables):
+    db = IPDB()
+    for k, v in tables.items():
+        db.register_table(k, v)
+    return db
+
+
+def test_parser_basic():
+    s = parse_sql("SELECT a, b AS bb FROM t WHERE a > 3 AND b = 'x' "
+                  "ORDER BY a DESC LIMIT 5")
+    assert isinstance(s, SelectStmt)
+    assert len(s.select) == 2 and s.select[1][0] == "bb"
+    assert s.limit == 5 and not s.order_by[0][1]
+
+
+def test_parser_create_llm_model():
+    s = parse_sql("CREATE LLM MODEL o4mini PATH 'o4-mini' ON PROMPT "
+                  "API 'https://api.openai.com/v1/' "
+                  "OPTIONS { 'n_threads': 1, 'batch_size': 16, "
+                  "'temperature': 0.5 }")
+    assert isinstance(s, CreateModel)
+    assert s.path == "o4-mini" and s.api and s.on_prompt
+    assert s.options == {"n_threads": 1, "batch_size": 16, "temperature": 0.5}
+
+
+def test_parser_llm_clauses():
+    s = parse_sql("SELECT state FROM LLM m (PROMPT 'find {state VARCHAR} "
+                  "from {{addr}}', Orders) WHERE country = 'USA'")
+    assert s.from_rel.kind == "llm" and s.from_rel.source.name == "Orders"
+    s2 = parse_sql("SELECT a FROM t WHERE LLM m (PROMPT 'is {x BOOLEAN}?')")
+    from repro.relational.expr import find_predicts
+    assert find_predicts(s2.where)
+
+
+def test_prompt_placeholders():
+    from repro.relational.expr import PromptTemplate
+    pt = PromptTemplate.parse(
+        "extract the {genre VARCHAR} and {year INT} from {{plot}} and {{t.title}}")
+    assert pt.inputs == ["plot", "t.title"]
+    assert pt.outputs == [("genre", "VARCHAR"), ("year", "INTEGER")]
+
+
+def test_sql_end_to_end_relational_only():
+    t = Table.from_rows([{"a": i, "b": f"s{i % 3}", "c": float(i)}
+                         for i in range(10)])
+    db = db_with({"t": t})
+    r = db.sql("SELECT b, count(*) AS n, avg(c) AS m FROM t "
+               "WHERE a >= 2 GROUP BY b ORDER BY b")
+    rows = r.table.rows()
+    assert [x["b"] for x in rows] == ["s0", "s1", "s2"]
+    assert sum(x["n"] for x in rows) == 8
+
+
+def test_join_matches_nested_loop():
+    l = Table.from_rows([{"k": i % 4, "lv": i} for i in range(12)])
+    r = Table.from_rows([{"k2": i % 3, "rv": i * 10} for i in range(7)])
+    db = db_with({"l": l, "r": r})
+    out = db.sql("SELECT lv, rv FROM l JOIN r ON k = k2").table
+    expected = {(lv["lv"], rv["rv"]) for lv in l.rows() for rv in r.rows()
+                if lv["k"] == rv["k2"]}
+    got = {(x["lv"], x["rv"]) for x in out.rows()}
+    assert got == expected
+
+
+@settings(max_examples=30, deadline=None)
+@given(vals=st.lists(st.integers(-50, 50), min_size=0, max_size=40),
+       thr=st.integers(-50, 50))
+def test_filter_property(vals, thr):
+    t = Table({"x": np.array(vals, np.int64)})
+    m = BinOp(">", Col("x"), Lit(thr)).evaluate(t)
+    out = t.mask(m)
+    assert list(out.column("x")) == [v for v in vals if v > thr]
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.lists(st.tuples(st.integers(0, 5), st.integers(-9, 9)),
+                     min_size=1, max_size=40))
+def test_groupby_sum_property(data):
+    t = Table.from_rows([{"g": g, "v": v} for g, v in data])
+    db = db_with({"t": t})
+    out = db.sql("SELECT g, sum(v) AS s FROM t GROUP BY g").table
+    expected = {}
+    for g, v in data:
+        expected[g] = expected.get(g, 0) + v
+    got = {int(r["g"]): r["s"] for r in out.rows()}
+    assert {k: float(v) for k, v in expected.items()} == got
+
+
+@settings(max_examples=20, deadline=None)
+@given(vals=st.lists(st.integers(-100, 100), min_size=0, max_size=30))
+def test_orderby_property(vals):
+    t = Table({"x": np.array(vals, np.int64)})
+    db = db_with({"t": t})
+    out = db.sql("SELECT x FROM t ORDER BY x").table
+    assert list(out.column("x")) == sorted(vals)
+    out2 = db.sql("SELECT x FROM t ORDER BY x DESC").table
+    assert list(out2.column("x")) == sorted(vals, reverse=True)

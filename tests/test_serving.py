@@ -1,0 +1,68 @@
+"""Serving engine: prefix-cache consistency, continuous batching, sampler
+parity with the Pallas kernel."""
+import json
+
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.serving.engine import InferenceEngine
+from repro.serving.grammar import Field, JsonGrammar
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = C.get_smoke_config("olmo-1b").replace(vocab_size=259)
+    return InferenceEngine(cfg, max_len=256, seed=0)
+
+
+def test_prefix_cache_matches_monolithic(engine):
+    """Greedy generation with shared-prefix KV reuse must equal generating
+    from the concatenated prompt."""
+    g = JsonGrammar([Field("x", "INTEGER")])
+    prefix = "INSTRUCTIONS: extract the number.\n"
+    suffix = "row: item42"
+    full = engine.generate([prefix + suffix], grammar=g, max_new_tokens=48,
+                           temperature=0.0)
+    split = engine.generate([suffix], grammar=g, shared_prefix=prefix,
+                            max_new_tokens=48, temperature=0.0)
+    assert full.texts[0] == split.texts[0]
+    # and the second call with the same prefix hits the cache
+    again = engine.generate([suffix], grammar=g, shared_prefix=prefix,
+                            max_new_tokens=48, temperature=0.0)
+    assert again.stats.prefix_hits == 1
+    assert again.stats.prefill_tokens < split.stats.prefill_tokens
+
+
+def test_prefix_cache_saves_prefill_tokens(engine):
+    g = JsonGrammar([Field("x", "BOOLEAN")])
+    prefix = "SHARED INSTRUCTION BLOCK " * 4
+    r1 = engine.generate([f"row {i}" for i in range(4)], grammar=g,
+                         shared_prefix=prefix, max_new_tokens=32)
+    # prefix prefilled once (batch=1), suffixes tiny
+    assert r1.stats.prefill_tokens < 4 * (len(prefix) + 16)
+
+
+def test_continuous_batcher_all_complete(engine):
+    g = JsonGrammar([Field("c", "VARCHAR")], max_str=5)
+    reqs = [Request(prompt=f"item {i}", grammar=g, max_new_tokens=32)
+            for i in range(9)]
+    cb = ContinuousBatcher(engine, num_slots=4)
+    done = cb.run(reqs, temperature=0.8)
+    assert all(r.text is not None for r in done)
+    for r in done:
+        if not r.error:
+            json.loads(r.text)
+
+
+def test_pallas_sampler_matches_numpy():
+    cfg = C.get_smoke_config("olmo-1b").replace(vocab_size=259)
+    e1 = InferenceEngine(cfg, max_len=128, seed=5, use_pallas_sampler=False)
+    e2 = InferenceEngine(cfg, max_len=128, seed=5, use_pallas_sampler=True)
+    g = JsonGrammar([Field("v", "INTEGER")])
+    r1 = e1.generate(["count 123"], grammar=g, max_new_tokens=32,
+                     temperature=0.0)
+    r2 = e2.generate(["count 123"], grammar=g, max_new_tokens=32,
+                     temperature=0.0)
+    assert r1.texts == r2.texts

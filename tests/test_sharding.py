@@ -1,0 +1,119 @@
+"""Sharding-rule validation WITHOUT device allocation: every PartitionSpec
+must divide its dimension on both production meshes, for every arch, for
+train/prefill/decode layouts. (The compile-level proof is the dry-run; this
+is the fast structural check.)"""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as C
+from repro.configs import common as CC
+from repro.models import model as MDL
+from repro.models.config import SHAPES_BY_NAME
+
+MESH_SHAPES = {
+    "single": {"data": 16, "model": 16},
+    "multi": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+class FakeMesh:
+    """Duck-typed stand-in for jax.Mesh (axis sizes only)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def _axis_size(mesh_shape, entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for e in entry:
+            n *= mesh_shape[e]
+        return n
+    return mesh_shape[entry]
+
+
+def _check(specs, pspecs, mesh_shape, what):
+    flat_s = jax.tree_util.tree_flatten_with_path(specs)[0]
+    flat_p = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p), f"{what}: tree mismatch"
+    for (path, leaf), spec in zip(flat_s, flat_p):
+        name = jax.tree_util.keystr(path)
+        assert len(spec) <= len(leaf.shape), f"{what}{name}: rank"
+        for d, entry in enumerate(spec):
+            k = _axis_size(mesh_shape, entry)
+            assert leaf.shape[d] % k == 0, \
+                f"{what}{name}: dim {d} ({leaf.shape[d]}) not divisible " \
+                f"by {entry}={k}"
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+@pytest.mark.parametrize("mesh_kind", ["single", "multi"])
+def test_param_shardings_divide(arch, mesh_kind):
+    from repro.launch import mesh as MS
+    cfg = C.get_config(arch)
+    mesh = FakeMesh(MESH_SHAPES[mesh_kind])
+    for attn_mode in ("heads", "hd"):
+        pspecs = MS.param_pspecs(cfg, mesh, fsdp=True, attn_mode=attn_mode)
+        _check(MDL.param_specs(cfg), pspecs, MESH_SHAPES[mesh_kind],
+               f"{arch}/{attn_mode}/")
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_shardings_divide(arch, shape_name):
+    from repro.launch import mesh as MS
+    from repro.models.config import shape_applicable
+    cfg = C.get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, _ = shape_applicable(cfg, shape)
+    if not ok:
+        pytest.skip("cell skipped by assignment rules")
+    for mesh_kind in ("single", "multi"):
+        mesh = FakeMesh(MESH_SHAPES[mesh_kind])
+        cspecs = MDL.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        pspecs = MS.cache_pspecs(cfg, mesh, cspecs)
+        _check(cspecs, pspecs, MESH_SHAPES[mesh_kind],
+               f"{arch}/{shape_name}/{mesh_kind}/")
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_batch_shardings_divide(arch):
+    from repro.launch import mesh as MS
+    cfg = C.get_config(arch)
+    for mesh_kind in ("single", "multi"):
+        mesh = FakeMesh(MESH_SHAPES[mesh_kind])
+        for shape_name in ("train_4k", "prefill_32k"):
+            shape = SHAPES_BY_NAME[shape_name]
+            bs = CC.train_batch_specs(cfg, shape.global_batch, shape.seq_len) \
+                if shape.kind == "train" else \
+                CC.prefill_batch_specs(cfg, shape.global_batch, shape.seq_len)
+            ps = MS.batch_pspecs(cfg, mesh, bs)
+            _check(bs, ps, MESH_SHAPES[mesh_kind],
+                   f"{arch}/{shape_name}/{mesh_kind}/")
+
+
+def test_all_cells_enumerated():
+    cells = C.cells(include_skipped=True)
+    assert len(cells) == 40                      # the assignment matrix
+    runnable = [c for c in cells if c[2]]
+    assert len(runnable) == 32
+    for (a, s, ok, why) in cells:
+        if not ok:
+            assert why, f"{a}/{s.name} skipped without a reason"
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_resident_serving_layout_divides(arch):
+    """§Perf opt B layout: resident weights must divide on both meshes and
+    never shard a contraction dim (no per-step gathers by construction)."""
+    from repro.launch import mesh as MS
+    cfg = C.get_config(arch)
+    for mesh_kind in ("single", "multi"):
+        mesh = FakeMesh(MESH_SHAPES[mesh_kind])
+        pspecs = MS.param_pspecs(cfg, mesh, fsdp=False, attn_mode="hd",
+                                 resident=True)
+        _check(MDL.param_specs(cfg), pspecs, MESH_SHAPES[mesh_kind],
+               f"{arch}/resident/{mesh_kind}/")
