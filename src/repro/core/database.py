@@ -20,7 +20,7 @@ from typing import Callable, Dict, List, Optional
 from repro.core.executors import (JaxExecutor, OracleExecutor, Predictor,
                                   TabularExecutor)
 from repro.core.optimizer import DEFAULT_FLAGS, Optimizer
-from repro.core.predict import PredictOperator
+from repro.core.predict import PredictOperator, PromptCache
 from repro.relational.binder import Binder
 from repro.relational.catalog import Catalog, ModelEntry
 from repro.relational.executor import ExecStats, PlanExecutor
@@ -52,6 +52,9 @@ class IPDB:
         self._jax_engines: Dict[str, object] = {}
         self._oracle_kwargs: Dict[str, dict] = {}
         self.last_stats: Optional[ExecStats] = None
+        # cross-query prompt cache: shared by every predict operator this
+        # database creates (keyed by model + instruction + input tuple)
+        self.prompt_cache = PromptCache()
 
     # -- registration ---------------------------------------------------
     def register_table(self, name: str, t: Table) -> None:
@@ -100,7 +103,8 @@ class IPDB:
         merged = dict(info.options or {})
         merged.setdefault("base_api", entry.base_api)
         info = dataclasses.replace(info, options=merged)
-        return PredictOperator(info, self._make_executor(entry), self.options)
+        return PredictOperator(info, self._make_executor(entry), self.options,
+                               prompt_cache=self.prompt_cache)
 
     # -- entry point -------------------------------------------------------
     def sql(self, query: str, *, explain: bool = False) -> QueryResult:
@@ -128,8 +132,11 @@ class IPDB:
         assert isinstance(stmt, SelectStmt)
         plan = Binder(self.catalog, self.options).bind_select(stmt)
         opt = Optimizer(self.catalog, self.options).optimize(plan)
+        ex = PlanExecutor(self.catalog, self._predict_factory,
+                          chunk_size=int(self.options.get("chunk_size", 2048)))
         return ("-- logical --\n" + plan_repr(plan)
-                + "\n-- optimized --\n" + plan_repr(opt))
+                + "\n-- optimized --\n" + plan_repr(opt)
+                + "\n-- physical --\n" + ex.physical_plan(opt))
 
     def _run_select(self, stmt: SelectStmt, explain: bool) -> QueryResult:
         t0 = time.time()
@@ -137,8 +144,9 @@ class IPDB:
         plan = Optimizer(self.catalog, self.options).optimize(plan)
         ex = PlanExecutor(self.catalog, self._predict_factory,
                           chunk_size=int(self.options.get("chunk_size", 2048)))
+        plan_text = (plan_repr(plan) + "\n-- physical --\n"
+                     + ex.physical_plan(plan)) if explain else None
         table = ex.run(plan)
         ex.stats.wall_s = time.time() - t0
         self.last_stats = ex.stats
-        return QueryResult(table, ex.stats,
-                           plan_repr(plan) if explain else None)
+        return QueryResult(table, ex.stats, plan_text)

@@ -91,7 +91,7 @@ class Optimizer:
             plan = self._semantic_select_vs_join(plan)
         if self.flags["enable_select_order"]:
             plan = self._order_semantic_selects(plan)
-        return plan
+        return self._annotate_cardinalities(plan)
 
     # -- helpers --------------------------------------------------------
     def _map_children(self, n: Node, fn) -> Node:
@@ -253,6 +253,34 @@ class Optimizer:
                                     join.extra)
                     return Join(join.left, sub, join.kind, join.left_keys,
                                 join.right_keys, join.extra)
+        return n
+
+    # -- pass: cardinality annotation for lowering -------------------------
+    def _annotate_cardinalities(self, n: Node) -> Node:
+        """Stamp Predict/SemanticJoin nodes with estimated per-chunk input
+        cardinalities (est_in_rows / est_cross_rows in info.options) so the
+        physical lowering pass can size chunks/windows. Estimation only —
+        never changes plan shape or results."""
+        n = self._map_children(n, self._annotate_cardinalities)
+        if isinstance(n, Predict):
+            try:
+                est = n.child.est_rows(self.cat) if n.child else 32.0
+            except Exception:
+                return n                    # unknown stats → no annotation
+            info = dataclasses.replace(
+                n.info, options={**n.info.options,
+                                 "est_in_rows": float(est)})
+            return Predict(n.child, info)
+        if isinstance(n, SemanticJoin):
+            try:
+                est = n.left.est_rows(self.cat) * n.right.est_rows(self.cat)
+            except Exception:
+                return n
+            info = dataclasses.replace(
+                n.info, options={**n.info.options,
+                                 "est_in_rows": float(est),
+                                 "est_cross_rows": float(est)})
+            return SemanticJoin(n.left, n.right, info)
         return n
 
     # -- rule: semantic select ordering (§7.10) ----------------------------

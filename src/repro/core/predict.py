@@ -59,6 +59,8 @@ class PredictStats:
     retries: int = 0
     batch_fallbacks: int = 0
     null_outputs: int = 0
+    pc_hits: int = 0               # cross-query prompt-cache hits
+    pc_misses: int = 0             # lookups that had to dispatch a call
 
     def add(self, o: "PredictStats") -> None:
         for f in dataclasses.fields(self):
@@ -89,16 +91,23 @@ def makespan(latencies: Sequence[float], workers: int, rpm: float = 0.0
 _JSON_RE = re.compile(r"[\[{].*[\]}]", re.DOTALL)
 
 
-def parse_structured(text: str, schema: Sequence[Tuple[str, str]],
-                     num_rows: int) -> Optional[List[dict]]:
-    """Extract typed rows from model text. Tolerates surrounding prose by
-    locating the outermost JSON value; returns None if unusable."""
+def extract_json(text: str) -> Optional[object]:
+    """Locate and parse the outermost JSON value in model text, tolerating
+    surrounding prose. Returns the decoded value or None."""
     m = _JSON_RE.search(text)
     if not m:
         return None
     try:
-        v = json.loads(m.group(0))
+        return json.loads(m.group(0))
     except json.JSONDecodeError:
+        return None
+
+
+def parse_structured(text: str, schema: Sequence[Tuple[str, str]],
+                     num_rows: int) -> Optional[List[dict]]:
+    """Extract typed rows from model text; returns None if unusable."""
+    v = extract_json(text)
+    if v is None:
         return None
     objs = v if isinstance(v, list) else [v]
     if len(objs) < num_rows:
@@ -132,9 +141,46 @@ def cast_value(v, typ: str):
         return None
 
 
+_MISS = object()
+
+
+class PromptCache:
+    """Cross-query prompt cache, owned by the database and shared by every
+    PredictOperator it creates. Keyed by (model, instruction, input tuple);
+    survives across operators, chunks, and queries, so a repeated query (or
+    an overlapping one against the same model/instruction) re-uses prior
+    inference results instead of re-dispatching calls."""
+
+    def __init__(self, max_entries: int = 200_000):
+        self._d: Dict[Tuple, List[Optional[object]]] = {}
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Tuple):
+        v = self._d.get(key, _MISS)
+        if v is _MISS:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return v
+
+    def put(self, key: Tuple, value: List[Optional[object]]) -> None:
+        if key not in self._d and len(self._d) >= self.max_entries:
+            self._d.pop(next(iter(self._d)))          # FIFO eviction
+        self._d[key] = value
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def clear(self) -> None:
+        self._d.clear()
+
+
 class PredictOperator:
     def __init__(self, info: PredictInfo, executor: Predictor,
-                 session_options: Dict[str, object]):
+                 session_options: Dict[str, object],
+                 prompt_cache: Optional[PromptCache] = None):
         # --- configuration stage (precedence per §5.3) ---
         opts = dict(DEFAULTS)
         opts.update({k: v for k, v in session_options.items()
@@ -146,8 +192,21 @@ class PredictOperator:
         executor.configure(opts)
         # --- loading stage ---
         executor.load()
+        # dedup store: the database-owned cross-query cache when injected,
+        # else a private per-operator dict
+        self.prompt_cache = prompt_cache
         self.cache: Dict[Tuple, List[Optional[object]]] = {}
+        self._ns = (info.model_name, self._instruction())
         self.stats = PredictStats()
+
+    def _cache_put(self, k: Tuple, v: List[Optional[object]]) -> None:
+        # total parse failures are memoized for the operator's lifetime
+        # only: a transient malformed response must not become a sticky
+        # NULL answer across queries
+        if self.prompt_cache is None or all(x is None for x in v):
+            self.cache[k] = v
+        else:
+            self.prompt_cache.put(self._ns + (k,), v)
 
     # ------------------------------ prompts --------------------------------
     def _instruction(self) -> str:
@@ -179,18 +238,27 @@ class PredictOperator:
         use_dedup = bool(self.opts.get("use_dedup", True))
         pending: List[int] = []
         seen: Dict[Tuple, int] = {}
+        cached: Dict[int, List[Optional[object]]] = {}
         for i, k in enumerate(keys):
-            if use_dedup:
-                if k in self.cache:
-                    self.stats.cache_hits += 1
-                    continue
-                if k in seen:
-                    self.stats.cache_hits += 1
-                    continue
-                seen[k] = i
+            if not use_dedup:
                 pending.append(i)
-            else:
-                pending.append(i)
+                continue
+            if k in seen:                  # in-chunk duplicate of a pending
+                self.stats.cache_hits += 1   # key: no cache probe
+                continue
+            v = self.cache.get(k, _MISS)   # operator-lifetime memo
+            if v is _MISS and self.prompt_cache is not None:
+                v = self.prompt_cache.get(self._ns + (k,))
+                if v is not _MISS:
+                    self.stats.pc_hits += 1
+            if v is not _MISS:
+                self.stats.cache_hits += 1
+                cached[i] = v
+                continue
+            seen[k] = i
+            pending.append(i)
+            if self.prompt_cache is not None:
+                self.stats.pc_misses += 1
 
         bs = int(self.opts.get("batch_size", 16)) \
             if self.opts.get("use_batching", True) else 1
@@ -205,7 +273,7 @@ class PredictOperator:
             for i, v in zip(batch, vals):
                 results[i] = v
                 if use_dedup:
-                    self.cache[keys[i]] = v
+                    self._cache_put(keys[i], v)
 
         workers = int(self.opts.get("n_threads", 16))
         rpm = float(self.opts.get("rate_limit_rpm", 0))
@@ -216,8 +284,10 @@ class PredictOperator:
         for i, k in enumerate(keys):
             if i in results:
                 out_vals.append(results[i])
-            elif use_dedup and k in self.cache:
-                out_vals.append(self.cache[k])
+            elif i in cached:
+                out_vals.append(cached[i])
+            elif use_dedup and seen.get(k) in results:
+                out_vals.append(results[seen[k]])
             else:
                 out_vals.append([None] * len(self.info.outputs))
 
@@ -239,18 +309,14 @@ class PredictOperator:
             instr, self.info.outputs, num_rows=0, rows=[],
             instruction=self.info.prompt.instruction if self.info.prompt else "")
         self._account(res)
-        m = _JSON_RE.search(res.text)
         rows = []
-        if m:
-            try:
-                v = json.loads(m.group(0))
-                objs = v if isinstance(v, list) else [v]
-                for o in objs[:max_rows]:
-                    if isinstance(o, dict):
-                        rows.append({n: cast_value(o.get(n), t)
-                                     for n, t in self.info.outputs})
-            except json.JSONDecodeError:
-                pass
+        v = extract_json(res.text)
+        if v is not None:
+            objs = v if isinstance(v, list) else [v]
+            for o in objs[:max_rows]:
+                if isinstance(o, dict):
+                    rows.append({n: cast_value(o.get(n), t)
+                                 for n, t in self.info.outputs})
         self.stats.sim_latency_s += res.sim_latency_s
         self.stats.serial_latency_s += res.sim_latency_s
         cols = {}

@@ -1,22 +1,22 @@
-"""Physical execution of logical plans (vectorized, chunked).
+"""Plan executor: lowers the logical plan to the chunked physical pipeline
+(`repro.relational.physical`) and drains it.
 
-Predict/SemanticJoin nodes are executed through core.predict operators
-created by a factory (so the database layer controls executor resolution
-and stats collection).
+All per-operator execution logic (streaming semantic joins, vectorized
+relational operators, chunk-at-a-time predict) lives in the physical layer;
+this module owns lowering, result assembly and stats aggregation.
+Predict/SemanticJoin nodes run through core.predict operators created by a
+factory (so the database layer controls executor resolution, the
+cross-query prompt cache, and stats collection).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
-
-import numpy as np
+from typing import Callable
 
 from repro.relational.catalog import Catalog
-from repro.relational.expr import Col, Expr, PredictExpr
-from repro.relational.plan import (Filter, GroupBy, Join, Limit, Node,
-                                   OrderBy, Predict, PredictInfo, Project,
-                                   Scan, SemanticJoin)
-from repro.relational.table import Table, _coerce
+from repro.relational.physical import PhysicalOp, lower, physical_repr
+from repro.relational.plan import Node, PredictInfo
+from repro.relational.table import Table
 
 
 @dataclasses.dataclass
@@ -31,6 +31,8 @@ class ExecStats:
     retries: int = 0
     batch_fallbacks: int = 0
     rows_predicted: int = 0
+    prompt_cache_hits: int = 0      # cross-query cache (database-owned)
+    prompt_cache_misses: int = 0
 
     @property
     def tokens(self) -> int:
@@ -48,8 +50,32 @@ class PlanExecutor:
 
     # ------------------------------------------------------------------
     def run(self, plan: Node) -> Table:
-        return self._exec(plan)
+        root = self.lower(plan)
+        parts = []
+        root.open()
+        try:
+            while True:
+                chunk = root.next_chunk()
+                if chunk is None:
+                    break
+                parts.append(chunk)
+        finally:
+            root.close()
+        out = parts[0]
+        for p in parts[1:]:
+            out = out.concat(p)
+        return out
 
+    def lower(self, plan: Node) -> PhysicalOp:
+        return lower(plan, self.cat, self.predict_factory, self.chunk_size,
+                     absorber=self)
+
+    def physical_plan(self, plan: Node) -> str:
+        """Lowered pipeline as text (operators are created lazily, so no
+        model executors are loaded)."""
+        return physical_repr(self.lower(plan))
+
+    # ------------------------------------------------------------------
     def _absorb(self, op) -> None:
         s = op.stats
         self.stats.llm_calls += s.calls
@@ -62,181 +88,5 @@ class PlanExecutor:
         self.stats.retries += s.retries
         self.stats.batch_fallbacks += s.batch_fallbacks
         self.stats.rows_predicted += s.rows_in
-
-    # ------------------------------------------------------------------
-    def _exec(self, n: Node) -> Table:
-        if isinstance(n, Scan):
-            return self.cat.table(n.table)
-        if isinstance(n, Filter):
-            t = self._exec(n.child)
-            return t.mask(np.asarray(n.predicate.evaluate(t), bool))
-        if isinstance(n, Project):
-            t = self._exec(n.child)
-            cols = {}
-            sch = {}
-            for name, e in n.exprs:
-                v = e.evaluate(t)
-                cols[name] = v
-                sch[name] = e.sql_type(t.schema)
-            return Table(cols, sch)
-        if isinstance(n, Join):
-            return self._join(n)
-        if isinstance(n, GroupBy):
-            return self._groupby(n)
-        if isinstance(n, OrderBy):
-            t = self._exec(n.child)
-            if len(t) == 0:
-                return t
-            order = np.arange(len(t))
-            for e, asc in reversed(n.keys):
-                v = e.evaluate(t)[order]
-                kind = "stable"
-                if v.dtype == object:
-                    v = np.array([("" if x is None else str(x)) for x in v])
-                idx = np.argsort(v, kind=kind)
-                if not asc:
-                    idx = idx[::-1]
-                order = order[idx]
-            return t.take(order)
-        if isinstance(n, Limit):
-            t = self._exec(n.child)
-            return t.slice(0, n.n)
-        if isinstance(n, Predict):
-            op = self.predict_factory(n.info)
-            if n.child is None:
-                out = op.scan()
-            else:
-                t = self._exec(n.child)
-                parts = []
-                for s in range(0, max(len(t), 1), self.chunk_size):
-                    chunk = t.slice(s, min(s + self.chunk_size, len(t)))
-                    parts.append(op(chunk))
-                out = parts[0]
-                for p in parts[1:]:
-                    out = out.concat(p)
-            self._absorb(op)
-            return out
-        if isinstance(n, SemanticJoin):
-            return self._semantic_join(n)
-        raise TypeError(f"cannot execute {type(n).__name__}")
-
-    # ------------------------------------------------------------------
-    def _join(self, n: Join) -> Table:
-        l = self._exec(n.left)
-        r = self._exec(n.right)
-        if n.kind == "cross" or not n.left_keys:
-            li = np.repeat(np.arange(len(l)), len(r))
-            ri = np.tile(np.arange(len(r)), len(l))
-        else:
-            index: Dict[tuple, List[int]] = {}
-            rk = [r.column(k) for k in n.right_keys]
-            for i in range(len(r)):
-                index.setdefault(tuple(c[i] for c in rk), []).append(i)
-            lk = [l.column(k) for k in n.left_keys]
-            li_list, ri_list = [], []
-            for i in range(len(l)):
-                for j in index.get(tuple(c[i] for c in lk), ()):
-                    li_list.append(i)
-                    ri_list.append(j)
-            li = np.array(li_list, np.int64)
-            ri = np.array(ri_list, np.int64)
-        lt = l.take(li)
-        rt = r.take(ri)
-        cols = dict(lt.cols)
-        sch = dict(lt.schema)
-        for k, v in rt.cols.items():
-            if k in cols:          # drop duplicate right key columns
-                continue
-            cols[k] = v
-            sch[k] = rt.schema[k]
-        out = Table(cols, sch)
-        if n.extra is not None:
-            out = out.mask(np.asarray(n.extra.evaluate(out), bool))
-        return out
-
-    def _semantic_join(self, n: SemanticJoin) -> Table:
-        l = self._exec(n.left)
-        r = self._exec(n.right)
-        li = np.repeat(np.arange(len(l)), len(r))
-        ri = np.tile(np.arange(len(r)), len(l))
-        lt = l.take(li)
-        rt = r.take(ri)
-        cols = dict(lt.cols)
-        sch = dict(lt.schema)
-        for k, v in rt.cols.items():
-            if k not in cols:
-                cols[k] = v
-                sch[k] = rt.schema[k]
-        cross = Table(cols, sch)
-        op = self.predict_factory(n.info)
-        parts = []
-        for s in range(0, max(len(cross), 1), self.chunk_size):
-            parts.append(op(cross.slice(s, min(s + self.chunk_size,
-                                               len(cross)))))
-        out = parts[0]
-        for p in parts[1:]:
-            out = out.concat(p)
-        self._absorb(op)
-        flag = out.column(n.info.out_cols[0])
-        keep = np.array([bool(x) for x in flag])
-        kept = out.mask(keep)
-        # semantic-join output schema = input schemas only (§3.3)
-        drop = set(n.info.out_cols)
-        return kept.select([c for c in kept.column_names if c not in drop])
-
-    # ------------------------------------------------------------------
-    def _groupby(self, n: GroupBy) -> Table:
-        t = self._exec(n.child)
-        if n.keys:
-            keys = [t.column(k) for k in n.keys]
-            groups: Dict[tuple, List[int]] = {}
-            for i in range(len(t)):
-                groups.setdefault(tuple(k[i] for k in keys), []).append(i)
-            items = list(groups.items())
-        else:
-            items = [((), list(range(len(t))))]
-
-        out_cols: Dict[str, list] = {k: [] for k in n.keys}
-        agg_out: Dict[str, list] = {name: [] for name, _, _ in n.aggs}
-        llm_groups: Dict[str, List[List[dict]]] = {}
-
-        for key, idx in items:
-            for k, kv in zip(n.keys, key):
-                out_cols[k].append(kv)
-            for name, fn, arg in n.aggs:
-                if fn == "llm_agg":
-                    continue
-                if fn == "count":
-                    agg_out[name].append(len(idx))
-                    continue
-                v = arg.evaluate(t)[idx] if arg is not None else \
-                    np.ones(len(idx))
-                v = np.asarray(v, np.float64)
-                agg_out[name].append({"sum": np.nansum, "avg": np.nanmean,
-                                      "min": np.nanmin, "max": np.nanmax}[fn](v))
-
-        infos = getattr(n, "llm_agg_infos", {})
-        for name, fn, arg in n.aggs:
-            if fn != "llm_agg":
-                continue
-            info = infos[name]
-            op = self.predict_factory(info)
-            group_rows = []
-            for key, idx in items:
-                group_rows.append([{c: t.row(i)[c] for c in info.inputs}
-                                   for i in idx])
-            agg_out[name] = op.aggregate(group_rows)
-            self._absorb(op)
-
-        cols = {}
-        sch = {}
-        for k in n.keys:
-            cols[k] = _coerce(out_cols[k], t.schema[k])
-            sch[k] = t.schema[k]
-        gb_schema = n.schema(self.cat) if False else {}
-        for name, fn, arg in n.aggs:
-            typ = "INTEGER" if fn == "count" else (
-                "VARCHAR" if fn == "llm_agg" else "DOUBLE")
-            cols[name] = _coerce(agg_out[name], typ)
-            sch[name] = typ
-        return Table(cols, sch)
+        self.stats.prompt_cache_hits += s.pc_hits
+        self.stats.prompt_cache_misses += s.pc_misses

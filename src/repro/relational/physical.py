@@ -1,0 +1,661 @@
+"""Physical operator pipeline (chunked, streaming).
+
+The logical plan (`repro.relational.plan.Node`) is *lowered* into a tree of
+physical operators that produce/consume `Table` chunks through an
+`open() / next_chunk() / close()` protocol (a `chunks()` generator wrapper
+is provided for convenience).  The executor drains the root operator; no
+operator other than the declared pipeline breakers (sort, group-by, hash
+join build side) materializes its whole input.
+
+Operator inventory:
+
+  ScanOp                    chunk_size slices of a catalog table
+  FilterOp / ProjectOp      chunk-at-a-time, vectorized expression eval
+  LimitOp                   early exit: stops pulling its child once
+                            `n` rows have been emitted
+  OrderByOp                 pipeline breaker (stable multi-key sort)
+  HashJoinOp                vectorized build+probe via numpy factorization
+                            (argsort + searchsorted, no per-row dict loops)
+  CrossJoinOp               index-arithmetic windows over |L|x|R|
+  GroupByOp                 pipeline breaker; grouping via stable argsort +
+                            ufunc.reduceat (no per-row Python loops)
+  PredictOp                 one PredictOperator instance fed one chunk at a
+                            time (the operator batches/dedups internally)
+  PredictScanOp             table generation (rho^s, LLM-as-scan)
+  SemanticJoinOp            STREAMING block-nested-loop semantic join: the
+                            cross product is produced window-by-window
+                            (peak intermediate <= window rows, never
+                            |L|x|R|), each window fed to one shared predict
+                            operator so dedup/caching span all windows
+
+Stats flow: operators that own a PredictOperator report it exactly once to
+the `absorber` (the PlanExecutor) when they are closed.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.relational.plan import (Filter, GroupBy, Join, Limit, Node,
+                                   OrderBy, Predict, PredictInfo, Project,
+                                   Scan, SemanticJoin)
+from repro.relational.table import Table, _coerce, _np_for
+
+
+def empty_table(schema: Dict[str, str]) -> Table:
+    return Table.from_rows([], dict(schema))
+
+
+# ---------------------------------------------------------------------------
+# factorization helpers (shared by HashJoinOp and GroupByOp)
+# ---------------------------------------------------------------------------
+def _needs_object_codes(*arrs: np.ndarray) -> bool:
+    for a in arrs:
+        if a.dtype == object:
+            return True
+        # NaN keys must keep the dict semantics of the row-at-a-time engine
+        # (NaN never equals NaN), which np.unique(equal_nan=True) would break
+        if np.issubdtype(a.dtype, np.floating) and np.isnan(a).any():
+            return True
+    return False
+
+
+def _dict_codes(arrs: Sequence[np.ndarray]) -> Tuple[List[np.ndarray], int]:
+    mapping: Dict[object, int] = {}
+    out = []
+    for a in arrs:
+        codes = np.empty(len(a), np.int64)
+        for i, v in enumerate(a.tolist()):
+            codes[i] = mapping.setdefault(v, len(mapping))
+        out.append(codes)
+    return out, max(1, len(mapping))
+
+
+def joint_codes(column_sets: Sequence[Sequence[np.ndarray]]
+                ) -> List[np.ndarray]:
+    """Factorize rows of one or more aligned column lists into shared int64
+    codes: rows (across all sets) with equal key tuples get equal codes.
+    `column_sets[s][c]` is key column c of input s."""
+    n_cols = len(column_sets[0])
+    lens = [len(cs[0]) if cs else 0 for cs in column_sets]
+    combined = [np.zeros(l, np.int64) for l in lens]
+    for c in range(n_cols):
+        cols = [cs[c] for cs in column_sets]
+        if _needs_object_codes(*cols):
+            codes, card = _dict_codes(cols)
+        else:
+            allv = np.concatenate(cols) if sum(lens) else \
+                np.array([], np.int64)
+            uniq, inv = np.unique(allv, return_inverse=True)
+            codes, off = [], 0
+            for l in lens:
+                codes.append(inv[off:off + l].astype(np.int64))
+                off += l
+            card = max(1, len(uniq))
+        combined = [cmb * card + cd for cmb, cd in zip(combined, codes)]
+        # re-compress so the running product can never overflow int64
+        allc = np.concatenate(combined) if sum(lens) else \
+            np.array([], np.int64)
+        _, inv = np.unique(allc, return_inverse=True)
+        out, off = [], 0
+        for l in lens:
+            out.append(inv[off:off + l].astype(np.int64))
+            off += l
+        combined = out
+    return combined
+
+
+# ---------------------------------------------------------------------------
+class PhysicalOp:
+    """Base chunk producer. Subclasses implement `_produce()` (a generator
+    of Tables); the base class provides the open/next_chunk/close protocol
+    and guarantees at least one (possibly empty) chunk so downstream
+    operators always see the output schema."""
+
+    name = "op"
+    children: List["PhysicalOp"] = []
+
+    def __init__(self, out_schema: Dict[str, str]):
+        self.out_schema = dict(out_schema)
+        self._gen = None
+        self._emitted = False
+
+    # -- protocol ----------------------------------------------------------
+    def open(self) -> None:
+        self._gen = self._produce()
+        self._emitted = False
+
+    def next_chunk(self) -> Optional[Table]:
+        if self._gen is None:
+            self.open()
+        chunk = next(self._gen, None)
+        if chunk is None:
+            if not self._emitted:
+                self._emitted = True
+                return empty_table(self.out_schema)
+            return None
+        self._emitted = True
+        return chunk
+
+    def close(self) -> None:
+        if self._gen is not None:
+            self._gen.close()
+            self._gen = None
+
+    def chunks(self):
+        self.open()
+        try:
+            while True:
+                c = self.next_chunk()
+                if c is None:
+                    break
+                yield c
+        finally:
+            self.close()
+
+    # -- impl --------------------------------------------------------------
+    def _produce(self):
+        raise NotImplementedError
+
+    def _drain(self, child: "PhysicalOp") -> Table:
+        """Materialize a child (pipeline breakers only)."""
+        parts = list(child.chunks())
+        out = parts[0]
+        for p in parts[1:]:
+            out = out.concat(p)
+        return out
+
+    def describe(self) -> str:
+        return self.name
+
+
+# ---------------------------------------------------------------------------
+class ScanOp(PhysicalOp):
+    name = "Scan"
+
+    def __init__(self, table: Table, table_name: str, chunk_size: int,
+                 out_schema):
+        super().__init__(out_schema)
+        self.table = table
+        self.table_name = table_name
+        self.chunk_size = max(1, int(chunk_size))
+        self.children = []
+
+    def _produce(self):
+        for s in range(0, len(self.table), self.chunk_size):
+            yield self.table.slice(s, min(s + self.chunk_size,
+                                          len(self.table)))
+
+    def describe(self):
+        return (f"Scan[{self.table_name}] rows={len(self.table)} "
+                f"chunk={self.chunk_size}")
+
+
+class FilterOp(PhysicalOp):
+    name = "Filter"
+
+    def __init__(self, child: PhysicalOp, predicate, out_schema):
+        super().__init__(out_schema)
+        self.child = child
+        self.predicate = predicate
+        self.children = [child]
+
+    def _produce(self):
+        for c in self.child.chunks():
+            out = c.mask(np.asarray(self.predicate.evaluate(c), bool))
+            if len(out):
+                yield out
+
+    def describe(self):
+        return f"Filter {self.predicate!r}"
+
+
+class ProjectOp(PhysicalOp):
+    name = "Project"
+
+    def __init__(self, child: PhysicalOp, exprs, out_schema):
+        super().__init__(out_schema)
+        self.child = child
+        self.exprs = exprs
+        self.children = [child]
+
+    def _produce(self):
+        for c in self.child.chunks():
+            cols, sch = {}, {}
+            for name, e in self.exprs:
+                cols[name] = e.evaluate(c)
+                sch[name] = e.sql_type(c.schema)
+            yield Table(cols, sch)
+
+    def describe(self):
+        return f"Project {[n for n, _ in self.exprs]}"
+
+
+class LimitOp(PhysicalOp):
+    name = "Limit"
+
+    def __init__(self, child: PhysicalOp, n: int, out_schema):
+        super().__init__(out_schema)
+        self.child = child
+        self.n = n
+        self.children = [child]
+
+    def _produce(self):
+        remaining = self.n
+        self.child.open()
+        try:
+            while remaining > 0:           # early exit: never over-pull
+                c = self.child.next_chunk()
+                if c is None:
+                    break
+                if len(c) > remaining:
+                    c = c.slice(0, remaining)
+                remaining -= len(c)
+                if len(c):
+                    yield c
+        finally:
+            self.child.close()
+
+    def describe(self):
+        return f"Limit {self.n} (early-exit)"
+
+
+class OrderByOp(PhysicalOp):
+    name = "OrderBy"
+
+    def __init__(self, child: PhysicalOp, keys, chunk_size: int, out_schema):
+        super().__init__(out_schema)
+        self.child = child
+        self.keys = keys
+        self.chunk_size = max(1, int(chunk_size))
+        self.children = [child]
+
+    def _produce(self):
+        t = self._drain(self.child)
+        if len(t) == 0:
+            return
+        order = np.arange(len(t))
+        for e, asc in reversed(self.keys):
+            v = e.evaluate(t)[order]
+            if v.dtype == object:
+                v = np.array([("" if x is None else str(x)) for x in v])
+            idx = np.argsort(v, kind="stable")
+            if not asc:
+                idx = idx[::-1]
+            order = order[idx]
+        t = t.take(order)
+        for s in range(0, len(t), self.chunk_size):
+            yield t.slice(s, min(s + self.chunk_size, len(t)))
+
+    def describe(self):
+        return f"OrderBy [{len(self.keys)} keys] (blocking sort)"
+
+
+# ---------------------------------------------------------------------------
+def _merge_sides(lt: Table, rt: Table) -> Table:
+    cols = dict(lt.cols)
+    sch = dict(lt.schema)
+    for k, v in rt.cols.items():
+        if k in cols:                      # drop duplicate right columns
+            continue
+        cols[k] = v
+        sch[k] = rt.schema[k]
+    return Table(cols, sch)
+
+
+class HashJoinOp(PhysicalOp):
+    """Equi-join via numpy factorization: both key sides are mapped into a
+    shared code space, the probe is one argsort + two searchsorted calls.
+    Output order matches the row-at-a-time reference (left order, matching
+    right rows ascending)."""
+    name = "HashJoin"
+
+    def __init__(self, left: PhysicalOp, right: PhysicalOp,
+                 left_keys, right_keys, extra, chunk_size: int, out_schema):
+        super().__init__(out_schema)
+        self.left = left
+        self.right = right
+        self.left_keys = left_keys
+        self.right_keys = right_keys
+        self.extra = extra
+        self.chunk_size = max(1, int(chunk_size))
+        self.children = [left, right]
+
+    def _produce(self):
+        l = self._drain(self.left)
+        r = self._drain(self.right)
+        if len(l) == 0 or len(r) == 0:
+            return
+        lk = [l.column(k) for k in self.left_keys]
+        rk = [r.column(k) for k in self.right_keys]
+        code_l, code_r = joint_codes([lk, rk])
+        order = np.argsort(code_r, kind="stable")
+        rs = code_r[order]
+        starts = np.searchsorted(rs, code_l, "left")
+        ends = np.searchsorted(rs, code_l, "right")
+        counts = ends - starts
+        total = int(counts.sum())
+        if total == 0:
+            return
+        li = np.repeat(np.arange(len(l)), counts)
+        offs = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        within = np.arange(total) - np.repeat(offs, counts)
+        ri = order[np.repeat(starts, counts) + within]
+        for s in range(0, total, self.chunk_size):
+            e = min(s + self.chunk_size, total)
+            out = _merge_sides(l.take(li[s:e]), r.take(ri[s:e]))
+            if self.extra is not None:
+                out = out.mask(np.asarray(self.extra.evaluate(out), bool))
+            if len(out):
+                yield out
+
+    def describe(self):
+        return (f"HashJoin keys={list(zip(self.left_keys, self.right_keys))} "
+                f"(vectorized build+probe)")
+
+
+class CrossJoinOp(PhysicalOp):
+    name = "CrossJoin"
+
+    def __init__(self, left: PhysicalOp, right: PhysicalOp, extra,
+                 chunk_size: int, out_schema):
+        super().__init__(out_schema)
+        self.left = left
+        self.right = right
+        self.extra = extra
+        self.chunk_size = max(1, int(chunk_size))
+        self.children = [left, right]
+
+    def _produce(self):
+        l = self._drain(self.left)
+        r = self._drain(self.right)
+        total = len(l) * len(r)
+        for s in range(0, total, self.chunk_size):
+            idx = np.arange(s, min(s + self.chunk_size, total))
+            out = _merge_sides(l.take(idx // len(r)), r.take(idx % len(r)))
+            if self.extra is not None:
+                out = out.mask(np.asarray(self.extra.evaluate(out), bool))
+            if len(out):
+                yield out
+
+    def describe(self):
+        return f"CrossJoin window={self.chunk_size}"
+
+
+# ---------------------------------------------------------------------------
+class GroupByOp(PhysicalOp):
+    """Pipeline breaker. Groups via stable argsort over factorized key codes
+    and aggregates with ufunc.reduceat; groups are emitted in first-
+    occurrence order (matching the dict-based reference)."""
+    name = "GroupBy"
+
+    def __init__(self, child: PhysicalOp, keys, aggs, llm_agg_infos,
+                 predict_factory, absorber, out_schema):
+        super().__init__(out_schema)
+        self.child = child
+        self.keys = keys
+        self.aggs = aggs
+        self.llm_agg_infos = llm_agg_infos or {}
+        self.predict_factory = predict_factory
+        self.absorber = absorber
+        self.children = [child]
+
+    def _group_layout(self, t: Table):
+        """Returns (order, starts, sizes, emit) — rows of group g (in emit
+        order) are order[starts[emit[g]] : starts[emit[g]] + sizes[emit[g]]]."""
+        n = len(t)
+        if not self.keys:
+            return (np.arange(n), np.array([0], np.int64),
+                    np.array([n], np.int64), np.array([0], np.int64))
+        if n == 0:
+            z = np.array([], np.int64)
+            return z, z, z, z
+        cols = [t.column(k) for k in self.keys]
+        codes = joint_codes([cols])[0]
+        order = np.argsort(codes, kind="stable")
+        sc = codes[order]
+        starts = np.nonzero(np.r_[True, sc[1:] != sc[:-1]])[0]
+        sizes = np.diff(np.r_[starts, n])
+        first_pos = order[starts]          # stable → first occurrence
+        emit = np.argsort(first_pos, kind="stable")
+        return order, starts, sizes, emit
+
+    def _produce(self):
+        t = self._drain(self.child)
+        order, starts, sizes, emit = self._group_layout(t)
+        n_groups = len(emit)
+
+        cols: Dict[str, np.ndarray] = {}
+        sch: Dict[str, str] = {}
+        if self.keys and n_groups:
+            first_pos = order[starts][emit]
+            for k in self.keys:
+                cols[k] = t.column(k)[first_pos]
+                sch[k] = t.schema[k]
+        else:
+            for k in self.keys:
+                cols[k] = np.array([], dtype=_np_for(t.schema[k]))
+                sch[k] = t.schema[k]
+
+        for name, fn, arg in self.aggs:
+            typ = "INTEGER" if fn == "count" else (
+                "VARCHAR" if fn == "llm_agg" else "DOUBLE")
+            if fn == "llm_agg":
+                cols[name] = _coerce(self._llm_agg(name, t, order, starts,
+                                                   sizes, emit), typ)
+            elif fn == "count":
+                cols[name] = _coerce([int(x) for x in sizes[emit]], typ)
+            else:
+                cols[name] = _coerce(self._numeric_agg(fn, arg, t, order,
+                                                       starts, sizes, emit),
+                                     typ)
+            sch[name] = typ
+        yield Table(cols, sch)
+
+    def _numeric_agg(self, fn, arg, t, order, starts, sizes, emit):
+        n_groups = len(emit)
+        if n_groups == 0:
+            return []
+        v = np.asarray(arg.evaluate(t) if arg is not None
+                       else np.ones(len(t)), np.float64)
+        vs = v[order]
+        if len(vs) == 0:                   # single keyless group, no rows
+            return [0.0 if fn == "sum" else float("nan")] * n_groups
+        nanm = np.isnan(vs)
+        nn = np.add.reduceat(np.where(nanm, 0.0, 1.0), starts)
+        if fn in ("sum", "avg"):
+            s = np.add.reduceat(np.where(nanm, 0.0, vs), starts)
+            with np.errstate(invalid="ignore", divide="ignore"):
+                res = s if fn == "sum" else s / nn
+        elif fn == "min":
+            res = np.minimum.reduceat(np.where(nanm, np.inf, vs), starts)
+            res = np.where(nn == 0, np.nan, res)
+        else:                              # max
+            res = np.maximum.reduceat(np.where(nanm, -np.inf, vs), starts)
+            res = np.where(nn == 0, np.nan, res)
+        return [float(x) for x in res[emit]]
+
+    def _llm_agg(self, name, t, order, starts, sizes, emit):
+        info = self.llm_agg_infos[name]
+        op = self.predict_factory(info)
+        group_rows = []
+        for g in emit:
+            idx = order[starts[g]:starts[g] + sizes[g]]
+            group_rows.append([{c: t.row(int(i))[c] for c in info.inputs}
+                               for i in idx])
+        out = op.aggregate(group_rows)
+        if self.absorber is not None:
+            self.absorber._absorb(op)
+        return out
+
+    def describe(self):
+        fns = [fn for _, fn, _ in self.aggs]
+        return (f"GroupBy keys={self.keys} aggs={fns} "
+                f"(vectorized argsort+reduceat)")
+
+
+# ---------------------------------------------------------------------------
+class PredictOp(PhysicalOp):
+    """Scalar/table inference: one shared PredictOperator consumes upstream
+    chunks as they arrive, so batching/dedup/prompt-cache state spans the
+    whole input stream."""
+    name = "Predict"
+
+    def __init__(self, child: PhysicalOp, info: PredictInfo, predict_factory,
+                 absorber, out_schema):
+        super().__init__(out_schema)
+        self.child = child
+        self.info = info
+        self.predict_factory = predict_factory
+        self.absorber = absorber
+        self.children = [child]
+
+    def _produce(self):
+        op = self.predict_factory(self.info)
+        try:
+            for c in self.child.chunks():
+                yield op(c)
+        finally:
+            if self.absorber is not None:
+                self.absorber._absorb(op)
+
+    def describe(self):
+        est = self.info.options.get("est_in_rows")
+        e = f" est_in={est:.0f}" if est is not None else ""
+        return f"Predict[{self.info.model_name}] out={self.info.out_cols}{e}"
+
+
+class PredictScanOp(PhysicalOp):
+    """Table generation (rho^s): the model IS the scan."""
+    name = "PredictScan"
+
+    def __init__(self, info: PredictInfo, predict_factory, absorber,
+                 out_schema):
+        super().__init__(out_schema)
+        self.info = info
+        self.predict_factory = predict_factory
+        self.absorber = absorber
+        self.children = []
+
+    def _produce(self):
+        op = self.predict_factory(self.info)
+        try:
+            yield op.scan()
+        finally:
+            if self.absorber is not None:
+                self.absorber._absorb(op)
+
+    def describe(self):
+        return f"PredictScan[{self.info.model_name}] out={self.info.out_cols}"
+
+
+class SemanticJoinOp(PhysicalOp):
+    """Streaming block-nested-loop semantic join (R x S -> predicate).
+
+    The inputs are drained (O(|L| + |R|)), but the cross product never
+    exists: windows of at most `window` cross rows are constructed by index
+    arithmetic, pushed through the shared predict operator, filtered on the
+    boolean output, and emitted. Peak intermediate size is `window`, not
+    |L| x |R|."""
+    name = "SemanticJoin"
+
+    def __init__(self, left: PhysicalOp, right: PhysicalOp,
+                 info: PredictInfo, predict_factory, absorber,
+                 window: int, out_schema):
+        super().__init__(out_schema)
+        self.left = left
+        self.right = right
+        self.info = info
+        self.predict_factory = predict_factory
+        self.absorber = absorber
+        self.window = max(1, int(window))
+        self.children = [left, right]
+
+    def _produce(self):
+        l = self._drain(self.left)
+        r = self._drain(self.right)
+        total = len(l) * len(r)
+        if total == 0:
+            return
+        op = self.predict_factory(self.info)
+        drop = set(self.info.out_cols)
+        try:
+            for s in range(0, total, self.window):
+                idx = np.arange(s, min(s + self.window, total))
+                chunk = _merge_sides(l.take(idx // len(r)),
+                                     r.take(idx % len(r)))
+                out = op(chunk)
+                flag = out.column(self.info.out_cols[0])
+                kept = out.mask(np.array([bool(x) for x in flag]))
+                # semantic-join output schema = input schemas only (§3.3)
+                kept = kept.select([c for c in kept.column_names
+                                    if c not in drop])
+                if len(kept):
+                    yield kept
+        finally:
+            if self.absorber is not None:
+                self.absorber._absorb(op)
+
+    def describe(self):
+        est = self.info.options.get("est_cross_rows")
+        e = f" est_cross={est:.0f}" if est is not None else ""
+        return (f"StreamingSemanticJoin[{self.info.model_name}] "
+                f"window={self.window}{e}")
+
+
+# ---------------------------------------------------------------------------
+# lowering: logical Node -> PhysicalOp tree
+# ---------------------------------------------------------------------------
+def lower(node: Node, cat, predict_factory: Callable, chunk_size: int,
+          absorber=None) -> PhysicalOp:
+    """Lowering pass. `absorber` (usually the PlanExecutor) receives every
+    PredictOperator's stats exactly once, when its owning op closes.
+    Chunk/window sizes are capped by the optimizer's cardinality
+    annotations (est_* in PredictInfo.options) where available."""
+    def rec(n: Node) -> PhysicalOp:
+        sch = n.schema(cat)
+        if isinstance(n, Scan):
+            return ScanOp(cat.table(n.table), n.table, chunk_size, sch)
+        if isinstance(n, Filter):
+            return FilterOp(rec(n.child), n.predicate, sch)
+        if isinstance(n, Project):
+            return ProjectOp(rec(n.child), n.exprs, sch)
+        if isinstance(n, Join):
+            if n.kind == "cross" or not n.left_keys:
+                return CrossJoinOp(rec(n.left), rec(n.right), n.extra,
+                                   chunk_size, sch)
+            return HashJoinOp(rec(n.left), rec(n.right), n.left_keys,
+                              n.right_keys, n.extra, chunk_size, sch)
+        if isinstance(n, GroupBy):
+            return GroupByOp(rec(n.child), n.keys, n.aggs,
+                             getattr(n, "llm_agg_infos", {}),
+                             predict_factory, absorber, sch)
+        if isinstance(n, OrderBy):
+            return OrderByOp(rec(n.child), n.keys, chunk_size, sch)
+        if isinstance(n, Limit):
+            return LimitOp(rec(n.child), n.n, sch)
+        if isinstance(n, Predict):
+            if n.child is None:
+                return PredictScanOp(n.info, predict_factory, absorber, sch)
+            return PredictOp(rec(n.child), n.info, predict_factory,
+                             absorber, sch)
+        if isinstance(n, SemanticJoin):
+            window = chunk_size
+            est = n.info.options.get("est_cross_rows")
+            if est is not None and np.isfinite(est):
+                # never fragment below a useful floor; only shrink the
+                # window when the estimate says the cross product is small
+                window = min(chunk_size, max(256, int(math.ceil(est))))
+            return SemanticJoinOp(rec(n.left), rec(n.right), n.info,
+                                  predict_factory, absorber, window, sch)
+        raise TypeError(f"cannot lower {type(n).__name__}")
+    return rec(node)
+
+
+def physical_repr(op: PhysicalOp, indent: int = 0) -> str:
+    lines = ["  " * indent + op.describe()]
+    for c in op.children:
+        lines.append(physical_repr(c, indent + 1))
+    return "\n".join(lines)

@@ -217,7 +217,7 @@ class InferenceEngine:
                     else:
                         out_tokens[i].append(t)
             stats.decode_steps += 1
-            stats.output_tokens += int((~done).sum() + done.sum() * 0)
+            stats.output_tokens += int((~done).sum())
             if done.all():
                 break
             lg, cache = decode(self.params, jnp.asarray(toks[:, None]),

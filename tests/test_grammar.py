@@ -5,6 +5,8 @@ import json
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.serving.grammar import Field, JsonGrammar

@@ -1,0 +1,221 @@
+"""Physical-pipeline tests: chunk-size result equivalence, streaming
+semantic-join memory bounds (spy predict factory), vectorized join/group-by
+correctness against nested-loop references, Limit early-exit, and the
+database-owned cross-query prompt cache."""
+import numpy as np
+import pytest
+
+from repro.core.database import IPDB
+from repro.relational.physical import joint_codes
+from repro.relational.table import Table
+
+
+def clean_oracle(instruction, rows):
+    out = []
+    for r in rows:
+        joined = " ".join(f"{k}={v}" for k, v in sorted(r.items()))
+        h = sum(map(ord, joined))
+        out.append({"flag": h % 3 == 0, "tag": f"t{h % 5}",
+                    "match": h % 4 == 0})
+    return out
+
+
+def make_db(chunk_size=2048, n=30):
+    db = IPDB()
+    db.register_table("T", Table.from_rows(
+        [{"a": i, "k": i % 4, "txt": f"row {i % 6}"} for i in range(n)]))
+    db.register_table("S", Table.from_rows(
+        [{"k2": i % 4, "s_val": f"s{i}"} for i in range(10)]))
+    db.register_oracle("orc", clean_oracle)
+    db.sql("CREATE LLM MODEL m PATH 'oracle:orc' ON PROMPT")
+    db.set_option("chunk_size", chunk_size)
+    return db
+
+
+EQUIV_QUERIES = [
+    # semantic select + cheap filter
+    "SELECT a FROM T WHERE LLM m (PROMPT 'chk {flag BOOLEAN} of {{txt}}') "
+    "= TRUE AND a > 2",
+    # streaming semantic join
+    "SELECT s_val FROM T JOIN S ON "
+    "LLM m (PROMPT 'is {{txt}} {match BOOLEAN} vs {{s_val}}')",
+    # vectorized hash join + group-by + order-by
+    "SELECT k, count(*) AS n, sum(a) AS s, avg(a) AS m FROM T "
+    "GROUP BY k ORDER BY k",
+    # scalar predict + order + limit
+    "SELECT a, LLM m (PROMPT 'get {tag VARCHAR} of {{txt}}') AS t1 "
+    "FROM T ORDER BY a DESC LIMIT 7",
+]
+
+
+@pytest.mark.parametrize("query", EQUIV_QUERIES)
+def test_results_identical_across_chunk_sizes(query):
+    """Chunking is pure mechanism: results are bit-identical for any
+    chunk_size (fresh database per run so caching can't leak answers)."""
+    reference = make_db(2048).sql(query).table.rows()
+    for chunk in (1, 3, 2048):
+        rows = make_db(chunk).sql(query).table.rows()
+        assert rows == reference, f"chunk_size={chunk} diverged"
+
+
+class SpyOperator:
+    """Wraps a PredictOperator, recording every chunk size it receives."""
+
+    def __init__(self, inner, seen):
+        self._inner = inner
+        self._seen = seen
+
+    def __call__(self, table):
+        self._seen.append(len(table))
+        return self._inner(table)
+
+    def __getattr__(self, attr):
+        return getattr(self._inner, attr)
+
+
+def test_semantic_join_streams_bounded_chunks():
+    """200x200 semantic join: the predict operator never sees more than
+    chunk_size cross rows at once — the cross product is never
+    materialized."""
+    chunk = 128
+    db = IPDB()
+    db.register_table("L", Table.from_rows(
+        [{"lid": i, "ltxt": f"a{i % 20}"} for i in range(200)]))
+    db.register_table("R", Table.from_rows(
+        [{"rid": i, "rtxt": f"b{i % 20}"} for i in range(200)]))
+
+    def orc(instruction, rows):
+        return [{"match": str(r.get("ltxt", ""))[-1]
+                 == str(r.get("rtxt", ""))[-1]} for r in rows]
+
+    db.register_oracle("orc", orc)
+    db.sql("CREATE LLM MODEL m PATH 'oracle:orc' ON PROMPT")
+    db.set_option("chunk_size", chunk)
+
+    seen = []
+    orig_factory = db._predict_factory
+    db._predict_factory = lambda info: SpyOperator(orig_factory(info), seen)
+
+    r = db.sql("SELECT lid, rid FROM L JOIN R ON "
+               "LLM m (PROMPT 'is {{ltxt}} {match BOOLEAN} with {{rtxt}}')")
+    assert seen, "predict operator never invoked"
+    assert max(seen) <= chunk          # peak intermediate bounded
+    assert sum(seen) == 200 * 200      # every cross row was considered
+    expected = sum(1 for i in range(200) for j in range(200)
+                   if str(i % 20)[-1] == str(j % 20)[-1])
+    assert len(r.table) == expected
+
+
+def test_cross_query_prompt_cache():
+    db = make_db()
+    q = ("SELECT a FROM T WHERE "
+         "LLM m (PROMPT 'chk {flag BOOLEAN} of {{txt}}') = TRUE")
+    r1 = db.sql(q)
+    assert r1.stats.llm_calls > 0
+    assert r1.stats.prompt_cache_misses > 0
+    r2 = db.sql(q)                      # repeated query: fully cached
+    assert r2.stats.llm_calls == 0
+    assert r2.stats.prompt_cache_hits > 0
+    assert r2.table.rows() == r1.table.rows()
+    assert db.prompt_cache.hits >= r2.stats.prompt_cache_hits
+
+
+def test_prompt_cache_disabled_with_dedup_off():
+    db = make_db()
+    db.set_option("use_dedup", False)
+    q = ("SELECT a FROM T WHERE "
+         "LLM m (PROMPT 'chk {flag BOOLEAN} of {{txt}}') = TRUE")
+    r1 = db.sql(q)
+    r2 = db.sql(q)
+    assert r1.stats.llm_calls == r2.stats.llm_calls > 0
+    assert r2.stats.prompt_cache_hits == 0
+
+
+def test_limit_early_exit_saves_llm_calls():
+    """Limit above a streaming Predict stops pulling chunks once satisfied."""
+    db = make_db(chunk_size=1, n=40)
+    db.set_option("use_batching", False)
+    db.set_option("use_dedup", False)
+    r = db.sql("SELECT a, LLM m (PROMPT 'get {tag VARCHAR} of {{txt}}') "
+               "AS t FROM T LIMIT 3")
+    assert len(r.table) == 3
+    assert r.stats.llm_calls == 3      # exactly the limit, not all 40 rows
+
+
+def test_hash_join_matches_nested_loop_reference():
+    rng = np.random.default_rng(7)
+    l_rows = [{"k": int(rng.integers(0, 5)), "j": f"x{int(rng.integers(0, 3))}",
+               "lv": i} for i in range(37)]
+    r_rows = [{"k2": int(rng.integers(0, 5)),
+               "j2": f"x{int(rng.integers(0, 3))}", "rv": i}
+              for i in range(23)]
+    db = IPDB()
+    db.register_table("l", Table.from_rows(l_rows))
+    db.register_table("r", Table.from_rows(r_rows))
+    out = db.sql("SELECT lv, rv FROM l JOIN r ON k = k2 AND j = j2").table
+    expected = [(a["lv"], b["rv"]) for a in l_rows for b in r_rows
+                if a["k"] == b["k2"] and a["j"] == b["j2"]]
+    got = list(zip(out.column("lv"), out.column("rv")))
+    assert sorted(got) == sorted(expected)
+    assert len(got) == len(expected)
+
+
+def test_groupby_matches_python_reference():
+    rng = np.random.default_rng(11)
+    rows = [{"g": int(rng.integers(0, 6)), "h": f"s{int(rng.integers(0, 3))}",
+             "v": float(rng.normal())} for i in range(200)]
+    db = IPDB()
+    db.register_table("t", Table.from_rows(rows))
+    out = db.sql("SELECT g, h, count(*) AS n, sum(v) AS s, min(v) AS lo, "
+                 "max(v) AS hi FROM t GROUP BY g, h").table
+    ref = {}
+    for r in rows:
+        ref.setdefault((r["g"], r["h"]), []).append(r["v"])
+    assert len(out) == len(ref)
+    for row in out.rows():
+        vals = ref[(row["g"], row["h"])]
+        assert row["n"] == len(vals)
+        assert row["s"] == pytest.approx(np.sum(vals))
+        assert row["lo"] == pytest.approx(np.min(vals))
+        assert row["hi"] == pytest.approx(np.max(vals))
+
+
+def test_groupby_first_occurrence_order():
+    rows = [{"g": x} for x in [3, 1, 3, 2, 1, 0]]
+    db = IPDB()
+    db.register_table("t", Table.from_rows(rows))
+    out = db.sql("SELECT g, count(*) AS n FROM t GROUP BY g").table
+    assert [int(x) for x in out.column("g")] == [3, 1, 2, 0]
+
+
+def test_joint_codes_shared_space():
+    l = [np.array([1, 2, 3, 2], np.int64),
+         np.array(["a", "b", "a", "b"], object)]
+    r = [np.array([2, 9, 1], np.int64),
+         np.array(["b", "a", "a"], object)]
+    cl, cr = joint_codes([l, r])
+    assert cl[1] == cl[3] == cr[0]     # (2,'b') everywhere
+    assert cl[0] == cr[2]              # (1,'a')
+    # distinct key tuples: (1,a), (2,b), (3,a), (9,a)
+    assert len(set(cr.tolist()) | set(cl.tolist())) == 4
+
+
+def test_explain_includes_physical_pipeline():
+    db = make_db()
+    text = db.explain("SELECT a FROM T WHERE LLM m (PROMPT 'chk "
+                      "{flag BOOLEAN} of {{txt}}') = TRUE AND a > 2")
+    assert "-- logical --" in text
+    assert "-- physical --" in text
+    assert "Scan[T]" in text
+    assert "Predict[m]" in text
+    res = db.sql("SELECT a FROM T LIMIT 2", explain=True)
+    assert res.plan and "-- physical --" in res.plan
+
+
+def test_empty_inputs_preserve_schema():
+    db = IPDB()
+    db.register_table("e", Table.from_rows(
+        [], schema={"a": "INTEGER", "b": "VARCHAR"}))
+    out = db.sql("SELECT a, b FROM e WHERE a > 1 ORDER BY a LIMIT 5").table
+    assert out.column_names == ["a", "b"]
+    assert len(out) == 0

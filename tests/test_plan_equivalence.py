@@ -4,7 +4,7 @@ optimized plan's output equals the all-optimizations-off plan's output,
 while never making more LLM calls."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.database import IPDB
 from repro.relational.table import Table

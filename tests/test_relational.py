@@ -2,7 +2,7 @@
 property tests of operator semantics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.database import IPDB
 from repro.relational.expr import BinOp, Col, Lit
