@@ -21,6 +21,7 @@ from repro.core.executors import (JaxExecutor, OracleExecutor, Predictor,
                                   TabularExecutor)
 from repro.core.optimizer import DEFAULT_FLAGS, Optimizer
 from repro.core.predict import PredictOperator, PromptCache
+from repro.core.service import InferenceService
 from repro.relational.binder import Binder
 from repro.relational.catalog import Catalog, ModelEntry
 from repro.relational.executor import ExecStats, PlanExecutor
@@ -43,6 +44,7 @@ class IPDB:
         self.options: Dict[str, object] = {
             "batch_size": 16, "n_threads": 16, "use_batching": True,
             "use_dedup": True, "rate_limit_rpm": 0.0,
+            "inflight_windows": 1, "max_dispatch_calls": 0,
             **DEFAULT_FLAGS,
         }
         if session_options:
@@ -55,6 +57,9 @@ class IPDB:
         # cross-query prompt cache: shared by every predict operator this
         # database creates (keyed by model + instruction + input tuple)
         self.prompt_cache = PromptCache()
+        # one inference service per session: every predict operator routes
+        # its dispatch through it (batching, in-flight dedup, scheduling)
+        self.inference_service = InferenceService()
 
     # -- registration ---------------------------------------------------
     def register_table(self, name: str, t: Table) -> None:
@@ -104,7 +109,8 @@ class IPDB:
         merged.setdefault("base_api", entry.base_api)
         info = dataclasses.replace(info, options=merged)
         return PredictOperator(info, self._make_executor(entry), self.options,
-                               prompt_cache=self.prompt_cache)
+                               prompt_cache=self.prompt_cache,
+                               service=self.inference_service)
 
     # -- entry point -------------------------------------------------------
     def sql(self, query: str, *, explain: bool = False) -> QueryResult:
@@ -127,6 +133,16 @@ class IPDB:
             return self._run_select(stmt, explain)
         raise TypeError(type(stmt))
 
+    def _dispatch_repr(self) -> str:
+        o = self.options
+        return ("InferenceService inflight_windows={} batch_size={} "
+                "n_threads={} rate_limit_rpm={} max_dispatch_calls={} "
+                "use_dedup={} use_batching={}".format(
+                    o.get("inflight_windows", 1), o.get("batch_size", 16),
+                    o.get("n_threads", 16), o.get("rate_limit_rpm", 0),
+                    o.get("max_dispatch_calls", 0),
+                    o.get("use_dedup", True), o.get("use_batching", True)))
+
     def explain(self, query: str) -> str:
         stmt = parse_sql(query)
         assert isinstance(stmt, SelectStmt)
@@ -136,7 +152,8 @@ class IPDB:
                           chunk_size=int(self.options.get("chunk_size", 2048)))
         return ("-- logical --\n" + plan_repr(plan)
                 + "\n-- optimized --\n" + plan_repr(opt)
-                + "\n-- physical --\n" + ex.physical_plan(opt))
+                + "\n-- physical --\n" + ex.physical_plan(opt)
+                + "\n-- dispatch --\n" + self._dispatch_repr())
 
     def _run_select(self, stmt: SelectStmt, explain: bool) -> QueryResult:
         t0 = time.time()
@@ -145,8 +162,20 @@ class IPDB:
         ex = PlanExecutor(self.catalog, self._predict_factory,
                           chunk_size=int(self.options.get("chunk_size", 2048)))
         plan_text = (plan_repr(plan) + "\n-- physical --\n"
-                     + ex.physical_plan(plan)) if explain else None
+                     + ex.physical_plan(plan) + "\n-- dispatch --\n"
+                     + self._dispatch_repr()) if explain else None
+        svc = self.inference_service
+        svc.max_dispatch = int(self.options.get("max_dispatch_calls", 0))
+        before = dataclasses.replace(svc.stats)
         table = ex.run(plan)
-        ex.stats.wall_s = time.time() - t0
-        self.last_stats = ex.stats
-        return QueryResult(table, ex.stats, plan_text)
+        st = ex.stats
+        st.dispatch_batches = svc.stats.dispatch_batches \
+            - before.dispatch_batches
+        calls = svc.stats.dispatched_calls - before.dispatched_calls
+        st.mean_batch_occupancy = (calls / st.dispatch_batches
+                                   if st.dispatch_batches else 0.0)
+        st.inflight_dedup_hits = svc.stats.inflight_dedup_hits \
+            - before.inflight_dedup_hits
+        st.wall_s = time.time() - t0
+        self.last_stats = st
+        return QueryResult(table, st, plan_text)

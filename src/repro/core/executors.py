@@ -41,6 +41,7 @@ class CallResult:
 class Predictor:
     """Extensible executor interface (paper Table 4)."""
     name = "base"
+    options: Dict[str, object] = {}
 
     def configure(self, options: Dict[str, object]) -> None:
         self.options = dict(options)
@@ -54,6 +55,21 @@ class Predictor:
                  instruction: str = "") -> CallResult:
         raise NotImplementedError
 
+    def complete_many(self, prompts: Sequence[str],
+                      schema: Sequence[Tuple[str, str]],
+                      num_rows_list: Sequence[int], *,
+                      shared_prefix: str = "",
+                      rows_list: Optional[List[Optional[List[dict]]]] = None,
+                      instruction: str = "") -> List[CallResult]:
+        """Answer a batch of marshaled prompts in one dispatch (the
+        InferenceService entry point).  Base implementation loops
+        `complete`; backends override with real batched execution."""
+        rows_list = rows_list if rows_list is not None \
+            else [None] * len(prompts)
+        return [self.complete(p, schema, nr, shared_prefix=shared_prefix,
+                              rows=r, instruction=instruction)
+                for p, nr, r in zip(prompts, num_rows_list, rows_list)]
+
     def scan_chunk(self, prompt: str, schema, max_rows: int) -> CallResult:
         return self.complete(prompt, schema, max_rows, instruction=prompt)
 
@@ -61,19 +77,28 @@ class Predictor:
 # ---------------------------------------------------------------------------
 class JaxExecutor(Predictor):
     """Local model executor: grammar-constrained generation on the
-    in-process engine (llama.cpp-analog, §5.2 'grammar forced generation')."""
+    in-process engine (llama.cpp-analog, §5.2 'grammar forced generation').
+
+    Single prompts go through `engine.generate` (keeping shared-prefix KV
+    reuse); multi-prompt dispatches from the InferenceService run through
+    ONE slot-based `ContinuousBatcher.run`, so relational queries get real
+    continuous batching instead of sequential generate calls."""
     name = "jax"
 
     def __init__(self, engine):
         self.engine = engine
+        self._batcher = None
 
-    def complete(self, prompt, schema, num_rows, *, shared_prefix="",
-                 rows=None, instruction=""):
+    def _grammar(self, schema, num_rows):
         from repro.serving.grammar import Field, JsonGrammar
         nr = num_rows if num_rows > 0 else \
             int(self.options.get("gen_rows", 4))     # table generation
-        g = JsonGrammar([Field(n, t) for n, t in schema], num_rows=nr,
-                        max_str=int(self.options.get("max_str", 24)))
+        return JsonGrammar([Field(n, t) for n, t in schema], num_rows=nr,
+                           max_str=int(self.options.get("max_str", 24)))
+
+    def complete(self, prompt, schema, num_rows, *, shared_prefix="",
+                 rows=None, instruction=""):
+        g = self._grammar(schema, num_rows)
         t0 = time.time()
         res = self.engine.generate(
             [prompt], grammar=g, shared_prefix=shared_prefix,
@@ -83,6 +108,34 @@ class JaxExecutor(Predictor):
         s = res.stats
         return CallResult(res.texts[0], s.input_tokens, s.output_tokens,
                           wall, wall)
+
+    def complete_many(self, prompts, schema, num_rows_list, *,
+                      shared_prefix="", rows_list=None, instruction=""):
+        # single prompt, or a shared instruction prefix (which the
+        # batcher's per-slot prefill cannot KV-share): generate path
+        if len(prompts) == 1 or shared_prefix:
+            return super().complete_many(
+                prompts, schema, num_rows_list, shared_prefix=shared_prefix,
+                rows_list=rows_list, instruction=instruction)
+        from repro.serving.scheduler import ContinuousBatcher, Request
+        if self._batcher is None:
+            self._batcher = ContinuousBatcher(
+                self.engine, num_slots=int(self.options.get("num_slots", 8)))
+        max_new = min(int(self.options.get("max_tokens", 4096)),
+                      self.engine.max_len)
+        reqs = [Request(prompt=p, grammar=self._grammar(schema, nr),
+                        max_new_tokens=max_new)
+                for p, nr in zip(prompts, num_rows_list)]
+        t0 = time.time()
+        done = self._batcher.run(
+            reqs, temperature=float(self.options.get("temperature", 0.7)))
+        per = (time.time() - t0) / max(1, len(done))
+        out = []
+        for r in done:
+            text = r.text or ""
+            out.append(CallResult(text, TOK.count_tokens(r.prompt),
+                                  TOK.count_tokens(text), per, per))
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -124,8 +177,10 @@ class OracleExecutor(Predictor):
             return (float(val) if val is not None else 0.0) * float(rng.uniform(0.5, 2.0))
         return f"{val}x" if val else "unknown"
 
-    def complete(self, prompt, schema, num_rows, *, shared_prefix="",
-                 rows=None, instruction=""):
+    def _answer(self, prompt, schema, num_rows, shared_prefix, rows,
+                instruction) -> CallResult:
+        """One request; the rng is keyed by the full prompt so answers are
+        deterministic regardless of how requests were batched."""
         rng = self._rng(prompt)
         full = shared_prefix + prompt
         in_toks = TOK.count_tokens(full)
@@ -155,6 +210,24 @@ class OracleExecutor(Predictor):
         return CallResult(text, in_toks, out_toks,
                           self.latency_model(in_toks, out_toks), 0.0)
 
+    def complete(self, prompt, schema, num_rows, *, shared_prefix="",
+                 rows=None, instruction=""):
+        return self._answer(prompt, schema, num_rows, shared_prefix, rows,
+                            instruction)
+
+    def complete_many(self, prompts, schema, num_rows_list, *,
+                      shared_prefix="", rows_list=None, instruction=""):
+        # baseline emulations override complete(); route through it so
+        # their behavior (refusal abort, unstructured output) is preserved
+        if type(self).complete is not OracleExecutor.complete:
+            return super().complete_many(
+                prompts, schema, num_rows_list, shared_prefix=shared_prefix,
+                rows_list=rows_list, instruction=instruction)
+        rows_list = rows_list if rows_list is not None \
+            else [None] * len(prompts)
+        return [self._answer(p, schema, nr, shared_prefix, r, instruction)
+                for p, nr, r in zip(prompts, num_rows_list, rows_list)]
+
 
 # ---------------------------------------------------------------------------
 class TabularExecutor(Predictor):
@@ -179,3 +252,25 @@ class TabularExecutor(Predictor):
         return CallResult(text, 0, 0,
                           max(wall, self.latency_per_row * max(1, num_rows)),
                           wall)
+
+    def complete_many(self, prompts, schema, num_rows_list, *,
+                      shared_prefix="", rows_list=None, instruction=""):
+        """Vectorized dispatch: all requests' feature rows go through ONE
+        predict_fn call, then the outputs are split back per request."""
+        rows_list = rows_list if rows_list is not None \
+            else [[] for _ in prompts]
+        t0 = time.time()
+        flat = [r for rws in rows_list for r in (rws or [])]
+        outs = self.predict_fn(flat)
+        per = (time.time() - t0) / max(1, len(prompts))
+        results, off = [], 0
+        for rws, nr in zip(rows_list, num_rows_list):
+            k = len(rws or [])
+            objs = [{n: o.get(n) for n, _ in schema}
+                    for o in outs[off:off + k]]
+            off += k
+            text = json.dumps(objs[0] if nr == 1 else objs)
+            results.append(CallResult(
+                text, 0, 0,
+                max(per, self.latency_per_row * max(1, nr)), per))
+        return results

@@ -4,36 +4,45 @@ optimizations of §6:
   configuration stage  — option precedence: model OPTIONS > session SET >
                          defaults (§5.3)
   loading stage        — executor resolution via the registry
-  execution stage      — chunked, vectorized:
-      prompt rewriting      (§5.1: placeholders → key/value tuple data,
-                             type instructions, row-count instructions)
-      structured output     (§5.2: schema → grammar for local models /
-                             JSON guidance for remote)
-      prompt deduplication  (§6.1: concurrent input→output cache)
-      multi-row marshaling  (§6.2: batch_size rows per call; cache-hit rows
-                             excluded from the batch)
-      parallel dispatch     (§6.3: worker pool + provider rate limit —
-                             modeled as a greedy makespan schedule over the
-                             per-call latencies; batch failure falls back
-                             to per-tuple calls)
-      typed extraction      (Table 3: VARCHAR/INTEGER/DOUBLE/BOOLEAN/
-                             DATETIME), retry with stricter formatting on
-                             unparsable output
+  execution stage      — chunked, vectorized, and SPLIT INTO TWO PHASES:
+      submit(table)  -> PendingChunk   cache probe, prompt rewriting
+                                       (§5.1), multi-row marshaling (§6.2)
+                                       and request construction; requests
+                                       are queued on the shared
+                                       InferenceService, nothing blocks
+      resolve(pending) -> Table        typed extraction (Table 3), retry
+                                       with stricter formatting, per-tuple
+                                       fallback, output assembly
+
+  The split lets physical operators keep several windows submitted ahead
+  (`inflight_windows`) so the service can dispatch them as one batch —
+  cross-window and cross-operator overlap (§6.3) instead of the old
+  synchronous one-chunk-at-a-time loop.  `__call__` remains the
+  degenerate submit-then-resolve case with behavior identical to the old
+  synchronous operator.
+
+Scheduling/makespan accounting lives in `repro.core.service`; each chunk
+opens one DispatchGroup whose makespan (greedy worker pool + rate limit)
+covers every call made for the chunk, including retries and fallbacks —
+the same numbers the operator used to compute locally.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import json
 import re
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
 from repro.core.executors import CallResult, Predictor
+from repro.core.service import (DispatchGroup, InferenceHandle,
+                                InferenceRequest, InferenceService, makespan)
 from repro.relational.plan import PredictInfo
 from repro.relational.table import Table, _coerce
+
+__all__ = ["DEFAULTS", "PredictStats", "PredictOperator", "PromptCache",
+           "PendingBatch", "PendingChunk", "makespan", "extract_json",
+           "parse_structured", "cast_value"]
 
 DEFAULTS = {
     "batch_size": 16,        # marshaled rows per call
@@ -43,6 +52,8 @@ DEFAULTS = {
     "rate_limit_rpm": 0,     # 0 = unlimited
     "retry_limit": 2,
     "chunk_size": 2048,      # vectorized chunk (DuckDB-analog)
+    "inflight_windows": 1,   # chunks kept submitted ahead of resolution
+    "num_slots": 8,          # continuous-batching decode slots (jax)
 }
 
 
@@ -61,31 +72,11 @@ class PredictStats:
     null_outputs: int = 0
     pc_hits: int = 0               # cross-query prompt-cache hits
     pc_misses: int = 0             # lookups that had to dispatch a call
+    inflight_hits: int = 0         # submits that joined a pending handle
 
     def add(self, o: "PredictStats") -> None:
         for f in dataclasses.fields(self):
             setattr(self, f.name, getattr(self, f.name) + getattr(o, f.name))
-
-
-def makespan(latencies: Sequence[float], workers: int, rpm: float = 0.0
-             ) -> float:
-    """Greedy schedule of calls onto `workers`, optionally throttled to
-    `rpm` requests/minute (paper Fig. 5 model)."""
-    if not latencies:
-        return 0.0
-    heap = [0.0] * max(1, workers)
-    heapq.heapify(heap)
-    gap = 60.0 / rpm if rpm else 0.0
-    next_slot = 0.0
-    end = 0.0
-    for l in latencies:
-        free = heapq.heappop(heap)
-        start = max(free, next_slot)
-        next_slot = start + gap
-        fin = start + l
-        end = max(end, fin)
-        heapq.heappush(heap, fin)
-    return end
 
 
 _JSON_RE = re.compile(r"[\[{].*[\]}]", re.DOTALL)
@@ -143,13 +134,20 @@ def cast_value(v, typ: str):
 
 _MISS = object()
 
+_STRICT = ("\nSTRICT: output MUST be raw JSON parsable by json.loads, "
+           "nothing else.\n")
+
 
 class PromptCache:
     """Cross-query prompt cache, owned by the database and shared by every
     PredictOperator it creates. Keyed by (model, instruction, input tuple);
     survives across operators, chunks, and queries, so a repeated query (or
     an overlapping one against the same model/instruction) re-uses prior
-    inference results instead of re-dispatching calls."""
+    inference results instead of re-dispatching calls.
+
+    Eviction is LRU: `get` re-inserts the hit entry at the back of the
+    (insertion-ordered) dict, `put` evicts from the front, so hot entries
+    survive churn that would have rotated them out under FIFO."""
 
     def __init__(self, max_entries: int = 200_000):
         self._d: Dict[Tuple, List[Optional[object]]] = {}
@@ -163,11 +161,13 @@ class PromptCache:
             self.misses += 1
         else:
             self.hits += 1
+            del self._d[key]               # touch-on-get: move to MRU end
+            self._d[key] = v
         return v
 
     def put(self, key: Tuple, value: List[Optional[object]]) -> None:
         if key not in self._d and len(self._d) >= self.max_entries:
-            self._d.pop(next(iter(self._d)))          # FIFO eviction
+            self._d.pop(next(iter(self._d)))          # LRU eviction
         self._d[key] = value
 
     def __len__(self) -> int:
@@ -177,10 +177,36 @@ class PromptCache:
         self._d.clear()
 
 
+@dataclasses.dataclass
+class PendingBatch:
+    """One marshaled call in flight: the chunk-row indices it answers, the
+    rendered input rows, and the service handle.  `owned` is False when
+    the request joined another submitter's identical in-flight handle
+    (the joiner must not account the call's tokens)."""
+    idxs: List[int]
+    rows: List[dict]
+    handle: InferenceHandle
+    owned: bool
+
+
+@dataclasses.dataclass
+class PendingChunk:
+    """Result of `PredictOperator.submit`: everything `resolve` needs to
+    turn the dispatched requests back into an output table."""
+    table: Table
+    keys: List[Tuple]
+    use_dedup: bool
+    seen: Dict[Tuple, int]
+    cached: Dict[int, List[Optional[object]]]
+    batches: List[PendingBatch]
+    group: DispatchGroup
+
+
 class PredictOperator:
     def __init__(self, info: PredictInfo, executor: Predictor,
                  session_options: Dict[str, object],
-                 prompt_cache: Optional[PromptCache] = None):
+                 prompt_cache: Optional[PromptCache] = None,
+                 service: Optional[InferenceService] = None):
         # --- configuration stage (precedence per §5.3) ---
         opts = dict(DEFAULTS)
         opts.update({k: v for k, v in session_options.items()
@@ -192,6 +218,9 @@ class PredictOperator:
         executor.configure(opts)
         # --- loading stage ---
         executor.load()
+        # dispatch goes through the (usually database-owned) service;
+        # standalone operators get a private one
+        self.service = service if service is not None else InferenceService()
         # dedup store: the database-owned cross-query cache when injected,
         # else a private per-operator dict
         self.prompt_cache = prompt_cache
@@ -224,9 +253,56 @@ class PredictOperator:
                 f"exactly {len(rows)} objects, in order): "
                 + json.dumps(rows, default=str))
 
+    # ------------------------------ dispatch -------------------------------
+    def _open_group(self) -> DispatchGroup:
+        return self.service.open_group(
+            workers=int(self.opts.get("n_threads", 16)),
+            rpm=float(self.opts.get("rate_limit_rpm", 0)))
+
+    def _submit_call(self, prompt: str, nr: int, rows, instr: str, *,
+                     exact_rows: bool = False
+                     ) -> Tuple[InferenceHandle, bool]:
+        req = InferenceRequest(
+            model_name=self.info.model_name, instruction=instr,
+            prompt=prompt, schema=tuple(self.info.outputs),
+            num_rows=nr if exact_rows else max(nr, 1),
+            executor=self.executor, rows=rows,
+            dedup=bool(self.opts.get("use_dedup", True)))
+        handle, owned = self.service.submit_one(req)
+        if not owned:
+            self.stats.inflight_hits += 1
+        return handle, owned
+
+    def _consume(self, handle: InferenceHandle, owned: bool,
+                 group: DispatchGroup) -> CallResult:
+        """Force a handle and account it: the call's tokens (owner only)
+        and its modeled latency, appended to the chunk's dispatch group in
+        consumption order so the greedy makespan matches the synchronous
+        schedule exactly."""
+        res = handle.result()            # flushes if still queued
+        if owned:
+            self._account(res)
+            group.latencies.append(res.sim_latency_s)
+        return res
+
+    def _call_now(self, prompt: str, nr: int, rows, instr: str,
+                  group: DispatchGroup, *, exact_rows: bool = False
+                  ) -> CallResult:
+        """Synchronous call through the service (retries, fallbacks)."""
+        handle, owned = self._submit_call(prompt, nr, rows, instr,
+                                          exact_rows=exact_rows)
+        return self._consume(handle, owned, group)
+
     # ------------------------------ execution -------------------------------
     def __call__(self, table: Table) -> Table:
-        """Table/scalar inference: append predicted columns to `table`."""
+        """Synchronous table/scalar inference — the degenerate pipeline:
+        submit one chunk and resolve it immediately."""
+        return self.resolve(self.submit(table))
+
+    def submit(self, table: Table) -> PendingChunk:
+        """Phase 1: probe caches, marshal the misses into batched requests
+        and queue them on the inference service.  Returns without
+        dispatching — `resolve` (or any service flush) does that."""
         t0 = time.time()
         n = len(table)
         self.stats.rows_in += n
@@ -262,36 +338,49 @@ class PredictOperator:
 
         bs = int(self.opts.get("batch_size", 16)) \
             if self.opts.get("use_batching", True) else 1
-        batches = [pending[i:i + bs] for i in range(0, len(pending), bs)]
+        group = self._open_group()
+        instr = self._instruction()
+        batches: List[PendingBatch] = []
+        for s in range(0, len(pending), bs):
+            idxs = pending[s:s + bs]
+            batch_rows = [rows[i] for i in idxs]
+            prompt = instr + "\n" + self._render_rows(batch_rows)
+            handle, owned = self._submit_call(prompt, len(batch_rows),
+                                              batch_rows, instr)
+            batches.append(PendingBatch(idxs, batch_rows, handle, owned))
 
-        latencies: List[float] = []
+        self.stats.wall_s += time.time() - t0
+        return PendingChunk(table, keys, use_dedup, seen, cached, batches,
+                            group)
+
+    def resolve(self, pending: PendingChunk) -> Table:
+        """Phase 2: force dispatch, parse/retry/fallback every batch, and
+        assemble the output chunk."""
+        t0 = time.time()
+        self.service.flush()
         results: Dict[int, List[Optional[object]]] = {}
-        for batch in batches:
-            batch_rows = [rows[i] for i in batch]
-            vals, lat = self._run_batch(batch_rows)
-            latencies.extend(lat)
-            for i, v in zip(batch, vals):
+        for b in pending.batches:
+            vals = self._resolve_batch(b, pending.group)
+            for i, v in zip(b.idxs, vals):
                 results[i] = v
-                if use_dedup:
-                    self._cache_put(keys[i], v)
+                if pending.use_dedup:
+                    self._cache_put(pending.keys[i], v)
 
-        workers = int(self.opts.get("n_threads", 16))
-        rpm = float(self.opts.get("rate_limit_rpm", 0))
-        self.stats.sim_latency_s += makespan(latencies, workers, rpm)
-        self.stats.serial_latency_s += sum(latencies)
+        self.stats.sim_latency_s += pending.group.makespan()
+        self.stats.serial_latency_s += pending.group.serial()
 
         out_vals: List[List[Optional[object]]] = []
-        for i, k in enumerate(keys):
+        for i, k in enumerate(pending.keys):
             if i in results:
                 out_vals.append(results[i])
-            elif i in cached:
-                out_vals.append(cached[i])
-            elif use_dedup and seen.get(k) in results:
-                out_vals.append(results[seen[k]])
+            elif i in pending.cached:
+                out_vals.append(pending.cached[i])
+            elif pending.use_dedup and pending.seen.get(k) in results:
+                out_vals.append(results[pending.seen[k]])
             else:
                 out_vals.append([None] * len(self.info.outputs))
 
-        out = table
+        out = pending.table
         for j, ((name, typ), col) in enumerate(
                 zip(self.info.outputs, self.info.out_cols)):
             colvals = [v[j] for v in out_vals]
@@ -300,15 +389,24 @@ class PredictOperator:
         self.stats.wall_s += time.time() - t0
         return out
 
+    def cancel(self, pending: PendingChunk) -> None:
+        """Discard a submitted chunk whose results are no longer needed
+        (pipelined operator closed early, e.g. under a Limit).  Joined
+        batches release their reference too, so a request is dropped from
+        the queue exactly when its last interested chunk cancels."""
+        for b in pending.batches:
+            self.service.cancel(b.handle)
+
     # table generation (ρ^s)
     def scan(self, max_rows: int = 64) -> Table:
         t0 = time.time()
-        instr = self._instruction() + \
+        group = self._open_group()
+        prompt = self._instruction() + \
             f"\nReturn a JSON array of at most {max_rows} objects."
-        res = self.executor.complete(
-            instr, self.info.outputs, num_rows=0, rows=[],
-            instruction=self.info.prompt.instruction if self.info.prompt else "")
-        self._account(res)
+        raw = self.info.prompt.instruction if self.info.prompt else ""
+        # num_rows=0 is meaningful here: table generation lets the model
+        # decide cardinality
+        res = self._call_now(prompt, 0, [], raw, group, exact_rows=True)
         rows = []
         v = extract_json(res.text)
         if v is not None:
@@ -317,8 +415,8 @@ class PredictOperator:
                 if isinstance(o, dict):
                     rows.append({n: cast_value(o.get(n), t)
                                  for n, t in self.info.outputs})
-        self.stats.sim_latency_s += res.sim_latency_s
-        self.stats.serial_latency_s += res.sim_latency_s
+        self.stats.sim_latency_s += group.makespan()
+        self.stats.serial_latency_s += group.serial()
         cols = {}
         sch = {}
         for (n, t), c in zip(self.info.outputs, self.info.out_cols):
@@ -327,72 +425,68 @@ class PredictOperator:
         self.stats.wall_s += time.time() - t0
         return Table(cols, sch)
 
-    # semantic aggregate (LLM AGG): one call per group
+    # semantic aggregate (LLM AGG): one call per group, all groups
+    # dispatched as one service batch
     def aggregate(self, groups: List[List[dict]]) -> List[Optional[object]]:
         t0 = time.time()
-        outs = []
-        lats = []
+        group = self._open_group()
+        instr = self._instruction()
+        suffix = "\nAggregate ALL rows into ONE JSON object."
+        pend = []
         for g in groups:
-            instr = self._instruction()
-            prompt = instr + "\n" + self._render_rows(g) + \
-                "\nAggregate ALL rows into ONE JSON object."
-            res = self.executor.complete(prompt, self.info.outputs, 1,
-                                         rows=g, instruction=instr)
-            self._account(res)
-            lats.append(res.sim_latency_s)
+            prompt = instr + "\n" + self._render_rows(g) + suffix
+            pend.append((g, *self._submit_call(prompt, 1, g, instr)))
+        self.service.flush()
+        outs = []
+        retries = int(self.opts.get("retry_limit", 2))
+        for g, handle, owned in pend:
+            res = self._consume(handle, owned, group)
             parsed = parse_structured(res.text, self.info.outputs, 1)
+            attempt = 0
+            while parsed is None and attempt < retries:
+                attempt += 1
+                self.stats.retries += 1
+                stricter = (instr + _STRICT + self._render_rows(g) + suffix)
+                res = self._call_now(stricter, 1, g, instr, group)
+                parsed = parse_structured(res.text, self.info.outputs, 1)
             outs.append(parsed[0][self.info.outputs[0][0]] if parsed else None)
-        self.stats.sim_latency_s += makespan(
-            lats, int(self.opts.get("n_threads", 16)),
-            float(self.opts.get("rate_limit_rpm", 0)))
-        self.stats.serial_latency_s += sum(lats)
+        self.stats.sim_latency_s += group.makespan()
+        self.stats.serial_latency_s += group.serial()
         self.stats.wall_s += time.time() - t0
         return outs
 
     # ------------------------------------------------------------------
-    def _run_batch(self, batch_rows: List[dict]
-                   ) -> Tuple[List[List[Optional[object]]], List[float]]:
-        """One marshaled call (+retries, + per-tuple fallback). Returns
-        (per-row output value lists, call latencies)."""
+    def _resolve_batch(self, b: PendingBatch, group: DispatchGroup
+                       ) -> List[List[Optional[object]]]:
+        """Parse one resolved batch (+strict retries, + per-tuple
+        fallback). Returns per-row output value lists."""
+        res = self._consume(b.handle, b.owned, group)
+        nr = len(b.rows)
         instr = self._instruction()
-        nr = len(batch_rows)
-        lats: List[float] = []
-
-        text, lat = self._call(instr + "\n" + self._render_rows(batch_rows),
-                               nr, batch_rows, instr)
-        lats.append(lat)
-        parsed = parse_structured(text, self.info.outputs, nr)
+        parsed = parse_structured(res.text, self.info.outputs, nr)
         retries = int(self.opts.get("retry_limit", 2))
         attempt = 0
         while parsed is None and attempt < retries:
             attempt += 1
             self.stats.retries += 1
-            stricter = (instr + "\nSTRICT: output MUST be raw JSON parsable "
-                        "by json.loads, nothing else.\n"
-                        + self._render_rows(batch_rows))
-            text, lat = self._call(stricter, nr, batch_rows, instr)
-            lats.append(lat)
-            parsed = parse_structured(text, self.info.outputs, nr)
+            stricter = instr + _STRICT + self._render_rows(b.rows)
+            res = self._call_now(stricter, nr, b.rows, instr, group)
+            parsed = parse_structured(res.text, self.info.outputs, nr)
 
         if parsed is None and nr > 1:
-            # §6.3: failed batch → per-tuple fallback
+            # §6.3: failed batch → per-tuple fallback, dispatched together
             self.stats.batch_fallbacks += 1
-            vals = []
-            for r in batch_rows:
-                v, l2 = self._run_batch([r])
-                vals.append(v[0])
-                lats.extend(l2)
-            return vals, lats
+            subs = []
+            for i, r in zip(b.idxs, b.rows):
+                prompt = instr + "\n" + self._render_rows([r])
+                handle, owned = self._submit_call(prompt, 1, [r], instr)
+                subs.append(PendingBatch([i], [r], handle, owned))
+            self.service.flush()
+            return [self._resolve_batch(sb, group)[0] for sb in subs]
         if parsed is None:
-            return [[None] * len(self.info.outputs)], lats
+            return [[None] * len(self.info.outputs)]
         names = [n for n, _ in self.info.outputs]
-        return [[p[n] for n in names] for p in parsed], lats
-
-    def _call(self, prompt: str, nr: int, rows, instr) -> Tuple[str, float]:
-        res = self.executor.complete(prompt, self.info.outputs, max(nr, 1),
-                                     rows=rows, instruction=instr)
-        self._account(res)
-        return res.text, res.sim_latency_s
+        return [[p[n] for n in names] for p in parsed]
 
     def _account(self, res: CallResult) -> None:
         self.stats.calls += 1

@@ -1,0 +1,244 @@
+"""Shared inference service: the async dispatch layer between relational
+operators and model executors (paper §6.3, generalized).
+
+Operators no longer call executors directly.  They build
+`InferenceRequest`s and `submit()` them to the database-owned
+`InferenceService`, receiving `InferenceHandle` futures.  The service
+
+  * maintains one queue per (model, instruction, schema) — requests that
+    can be answered by the same executor configuration batch together,
+    across chunks, windows and operators;
+  * dedups in-flight requests: a second identical request submitted while
+    the first is still pending joins the existing handle instead of
+    re-dispatching (complementing the cross-query PromptCache, which only
+    covers *resolved* results);
+  * dispatches each queue in one `Predictor.complete_many` call per
+    `flush()` — for the JAX backend that is one continuous-batching run
+    over all marshaled prompts, for the oracle/tabular backends one
+    vectorized pass — optionally capped at `max_dispatch` calls per batch
+    (a simple provider rate limit);
+  * owns makespan accounting: per-call modeled latencies are recorded on
+    `DispatchGroup`s (one per predict chunk) and reduced with the same
+    greedy worker-pool + rpm model that previously lived inside
+    `PredictOperator`.
+
+Synchronous execution is the degenerate case: submit immediately followed
+by flush()+resolve behaves exactly like the old direct `complete()` path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.executors import CallResult, Predictor
+
+
+def makespan(latencies: Sequence[float], workers: int, rpm: float = 0.0
+             ) -> float:
+    """Greedy schedule of calls onto `workers`, optionally throttled to
+    `rpm` requests/minute (paper Fig. 5 model)."""
+    if not latencies:
+        return 0.0
+    heap = [0.0] * max(1, workers)
+    heapq.heapify(heap)
+    gap = 60.0 / rpm if rpm else 0.0
+    next_slot = 0.0
+    end = 0.0
+    for l in latencies:
+        free = heapq.heappop(heap)
+        start = max(free, next_slot)
+        next_slot = start + gap
+        fin = start + l
+        end = max(end, fin)
+        heapq.heappush(heap, fin)
+    return end
+
+
+@dataclasses.dataclass
+class DispatchGroup:
+    """Accounting scope for one unit of operator work (one predict chunk,
+    one aggregate call, one table scan).  Every call made on behalf of the
+    group — including retries and per-tuple fallbacks — records its
+    modeled latency here in batch order (the operator appends as it
+    consumes results), so the group's greedy makespan matches the old
+    per-chunk `PredictOperator` accounting exactly."""
+    workers: int = 16
+    rpm: float = 0.0
+    latencies: List[float] = dataclasses.field(default_factory=list)
+
+    def makespan(self) -> float:
+        return makespan(self.latencies, self.workers, self.rpm)
+
+    def serial(self) -> float:
+        return float(sum(self.latencies))
+
+
+@dataclasses.dataclass
+class InferenceRequest:
+    """One executor call to be: a fully rendered prompt plus the metadata
+    the executor needs to answer and the service needs to route it."""
+    model_name: str
+    instruction: str
+    prompt: str
+    schema: Tuple[Tuple[str, str], ...]
+    num_rows: int
+    executor: Predictor
+    rows: Optional[List[dict]] = None
+    shared_prefix: str = ""
+    dedup: bool = True                 # False: never join another handle
+
+    @property
+    def queue_key(self) -> Tuple:
+        # shared_prefix included so every dispatch batch is
+        # prefix-homogeneous (executors apply one prefix per batch)
+        return (self.model_name, self.instruction, self.schema,
+                self.shared_prefix)
+
+    @property
+    def dedup_key(self) -> Tuple:
+        return (self.model_name, self.instruction, self.schema,
+                self.shared_prefix, self.prompt, self.num_rows)
+
+
+class InferenceHandle:
+    """Future for one dispatched (or joined) request."""
+    __slots__ = ("request", "_service", "_result", "refs")
+
+    def __init__(self, request: InferenceRequest, service: "InferenceService"):
+        self.request = request
+        self._service = service
+        self._result: Optional[CallResult] = None
+        self.refs = 1                  # submitters sharing this handle
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> CallResult:
+        if self._result is None:
+            self._service.flush()
+        if self._result is None:
+            raise RuntimeError("inference request cancelled before dispatch")
+        return self._result
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    submitted: int = 0
+    dispatched_calls: int = 0          # executor calls actually made
+    dispatch_batches: int = 0          # complete_many invocations
+    inflight_dedup_hits: int = 0       # submits that joined a pending handle
+
+    @property
+    def mean_batch_occupancy(self) -> float:
+        if self.dispatch_batches == 0:
+            return 0.0
+        return self.dispatched_calls / self.dispatch_batches
+
+
+class InferenceService:
+    """Batching request broker between predict operators and executors.
+
+    `submit()` enqueues; nothing reaches an executor until `flush()`
+    (called implicitly by `InferenceHandle.result()`), so pipelined
+    operators can stack several windows of requests and have them
+    dispatched as one batch per (model, instruction) queue."""
+
+    def __init__(self, *, max_dispatch: int = 0):
+        # queues preserve submission order (dict insertion order)
+        self._queues: Dict[Tuple, List[InferenceHandle]] = {}
+        self._inflight: Dict[Tuple, InferenceHandle] = {}
+        self.max_dispatch = int(max_dispatch)   # 0 = unbounded batch
+        self.stats = ServiceStats()
+
+    # -- submission ------------------------------------------------------
+    def open_group(self, workers: int = 16, rpm: float = 0.0) -> DispatchGroup:
+        return DispatchGroup(max(1, int(workers)), float(rpm))
+
+    def submit_one(self, request: InferenceRequest
+                   ) -> Tuple[InferenceHandle, bool]:
+        """Enqueue one request.  Returns (handle, owned): owned is False
+        when the request joined an identical pending handle (in-flight
+        dedup) — the joiner must not account the call's tokens."""
+        self.stats.submitted += 1
+        if request.dedup:
+            h = self._inflight.get(request.dedup_key)
+            if h is not None and not h.done:
+                h.refs += 1
+                self.stats.inflight_dedup_hits += 1
+                return h, False
+        h = InferenceHandle(request, self)
+        self._queues.setdefault(request.queue_key, []).append(h)
+        if request.dedup:
+            self._inflight[request.dedup_key] = h
+        return h, True
+
+    def submit(self, requests: Sequence[InferenceRequest]
+               ) -> List[InferenceHandle]:
+        return [self.submit_one(r)[0] for r in requests]
+
+    # -- dispatch --------------------------------------------------------
+    def flush(self) -> None:
+        """Dispatch every queued request.  Each per-queue slice of at most
+        `max_dispatch` requests is one dispatch batch: one
+        `complete_many` executor call."""
+        for qkey in list(self._queues):
+            handles = self._queues.pop(qkey, [])
+            if not handles:
+                continue
+            step = self.max_dispatch if self.max_dispatch > 0 else len(handles)
+            for s in range(0, len(handles), step):
+                self._dispatch(handles[s:s + step])
+
+    def _dispatch(self, handles: List[InferenceHandle]) -> None:
+        reqs = [h.request for h in handles]
+        # clear the in-flight map BEFORE the executor runs: if it raises,
+        # later identical submits must re-dispatch instead of joining a
+        # handle that can never resolve
+        for r in reqs:
+            if r.dedup:
+                self._inflight.pop(r.dedup_key, None)
+        executor = reqs[0].executor
+        results = executor.complete_many(
+            [r.prompt for r in reqs], list(reqs[0].schema),
+            [r.num_rows for r in reqs],
+            shared_prefix=reqs[0].shared_prefix,
+            rows_list=[r.rows for r in reqs],
+            instruction=reqs[0].instruction)
+        self.stats.dispatch_batches += 1
+        self.stats.dispatched_calls += len(reqs)
+        for h, res in zip(handles, results):
+            h._result = res
+
+    def drain(self) -> None:
+        """Flush until no request remains queued."""
+        while any(self._queues.values()):
+            self.flush()
+
+    def cancel(self, handle: InferenceHandle) -> bool:
+        """Release one submitter's interest in a still-queued handle
+        (pipelined operator closed early, e.g. under an early-exit Limit).
+        The request is removed from its queue only when the last
+        submitter cancels — joined submitters keep it alive."""
+        if handle.done:
+            return False
+        handle.refs -= 1
+        if handle.refs > 0:
+            return False
+        q = self._queues.get(handle.request.queue_key)
+        if q and handle in q:
+            q.remove(handle)
+            if handle.request.dedup:
+                self._inflight.pop(handle.request.dedup_key, None)
+            return True
+        return False
+
+    @property
+    def pending(self) -> int:
+        return sum(len(v) for v in self._queues.values())
+
+    def describe(self) -> str:
+        return (f"InferenceService queues={len(self._queues)} "
+                f"pending={self.pending} max_dispatch="
+                f"{self.max_dispatch or 'unbounded'}")

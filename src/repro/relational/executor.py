@@ -33,6 +33,11 @@ class ExecStats:
     rows_predicted: int = 0
     prompt_cache_hits: int = 0      # cross-query cache (database-owned)
     prompt_cache_misses: int = 0
+    # inference-service dispatch accounting (filled per-query by IPDB from
+    # the shared service's counters)
+    dispatch_batches: int = 0       # complete_many executor invocations
+    mean_batch_occupancy: float = 0.0   # dispatched calls / dispatch batch
+    inflight_dedup_hits: int = 0    # submits that joined a pending handle
 
     @property
     def tokens(self) -> int:

@@ -20,7 +20,9 @@ Operator inventory:
   GroupByOp                 pipeline breaker; grouping via stable argsort +
                             ufunc.reduceat (no per-row Python loops)
   PredictOp                 one PredictOperator instance fed one chunk at a
-                            time (the operator batches/dedups internally)
+                            time (the operator batches/dedups internally);
+                            keeps up to `inflight_windows` chunks submitted
+                            to the inference service ahead of resolution
   PredictScanOp             table generation (rho^s, LLM-as-scan)
   SemanticJoinOp            STREAMING block-nested-loop semantic join: the
                             cross product is produced window-by-window
@@ -497,10 +499,20 @@ class GroupByOp(PhysicalOp):
 
 
 # ---------------------------------------------------------------------------
+def _inflight_windows(op) -> int:
+    return max(1, int(op.opts.get("inflight_windows", 1)))
+
+
 class PredictOp(PhysicalOp):
     """Scalar/table inference: one shared PredictOperator consumes upstream
     chunks as they arrive, so batching/dedup/prompt-cache state spans the
-    whole input stream."""
+    whole input stream.
+
+    With `inflight_windows` > 1 the op keeps that many chunks *submitted*
+    to the inference service before resolving the oldest, so chunk N+1's
+    requests dispatch in the same service batch as chunk N's and overlap
+    its downstream processing.  The default of 1 is the synchronous
+    degenerate case (submit, resolve, emit)."""
     name = "Predict"
 
     def __init__(self, child: PhysicalOp, info: PredictInfo, predict_factory,
@@ -514,10 +526,18 @@ class PredictOp(PhysicalOp):
 
     def _produce(self):
         op = self.predict_factory(self.info)
+        inflight = _inflight_windows(op)
+        pending = []
         try:
             for c in self.child.chunks():
-                yield op(c)
+                pending.append(op.submit(c))
+                while len(pending) >= inflight:
+                    yield op.resolve(pending.pop(0))
+            while pending:
+                yield op.resolve(pending.pop(0))
         finally:
+            for pc in pending:             # closed early (e.g. Limit)
+                op.cancel(pc)
             if self.absorber is not None:
                 self.absorber._absorb(op)
 
@@ -580,21 +600,37 @@ class SemanticJoinOp(PhysicalOp):
         if total == 0:
             return
         op = self.predict_factory(self.info)
+        inflight = _inflight_windows(op)
         drop = set(self.info.out_cols)
+
+        def emit(pc):
+            out = op.resolve(pc)
+            flag = out.column(self.info.out_cols[0])
+            kept = out.mask(np.array([bool(x) for x in flag]))
+            # semantic-join output schema = input schemas only (§3.3)
+            return kept.select([c for c in kept.column_names
+                                if c not in drop])
+
+        pending = []
         try:
+            # window N+1's inference is submitted (and batch-dispatched)
+            # while window N's survivors flow downstream
             for s in range(0, total, self.window):
                 idx = np.arange(s, min(s + self.window, total))
                 chunk = _merge_sides(l.take(idx // len(r)),
                                      r.take(idx % len(r)))
-                out = op(chunk)
-                flag = out.column(self.info.out_cols[0])
-                kept = out.mask(np.array([bool(x) for x in flag]))
-                # semantic-join output schema = input schemas only (§3.3)
-                kept = kept.select([c for c in kept.column_names
-                                    if c not in drop])
+                pending.append(op.submit(chunk))
+                while len(pending) >= inflight:
+                    kept = emit(pending.pop(0))
+                    if len(kept):
+                        yield kept
+            while pending:
+                kept = emit(pending.pop(0))
                 if len(kept):
                     yield kept
         finally:
+            for pc in pending:             # closed early (e.g. Limit)
+                op.cancel(pc)
             if self.absorber is not None:
                 self.absorber._absorb(op)
 

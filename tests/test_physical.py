@@ -50,16 +50,23 @@ EQUIV_QUERIES = [
 
 @pytest.mark.parametrize("query", EQUIV_QUERIES)
 def test_results_identical_across_chunk_sizes(query):
-    """Chunking is pure mechanism: results are bit-identical for any
-    chunk_size (fresh database per run so caching can't leak answers)."""
+    """Chunking and dispatch pipelining are pure mechanism: results are
+    bit-identical for any chunk_size and any inflight_windows depth (fresh
+    database per run so caching can't leak answers)."""
     reference = make_db(2048).sql(query).table.rows()
-    for chunk in (1, 3, 2048):
-        rows = make_db(chunk).sql(query).table.rows()
-        assert rows == reference, f"chunk_size={chunk} diverged"
+    for inflight in (1, 4):
+        for chunk in (1, 3, 2048):
+            db = make_db(chunk)
+            db.set_option("inflight_windows", inflight)
+            rows = db.sql(query).table.rows()
+            assert rows == reference, \
+                f"chunk_size={chunk} inflight_windows={inflight} diverged"
 
 
 class SpyOperator:
-    """Wraps a PredictOperator, recording every chunk size it receives."""
+    """Wraps a PredictOperator, recording every chunk size it receives
+    (whether it arrives through the synchronous __call__ path or the
+    pipelined submit/resolve protocol)."""
 
     def __init__(self, inner, seen):
         self._inner = inner
@@ -68,6 +75,10 @@ class SpyOperator:
     def __call__(self, table):
         self._seen.append(len(table))
         return self._inner(table)
+
+    def submit(self, table):
+        self._seen.append(len(table))
+        return self._inner.submit(table)
 
     def __getattr__(self, attr):
         return getattr(self._inner, attr)
@@ -104,6 +115,54 @@ def test_semantic_join_streams_bounded_chunks():
     expected = sum(1 for i in range(200) for j in range(200)
                    if str(i % 20)[-1] == str(j % 20)[-1])
     assert len(r.table) == expected
+
+
+def test_inflight_dedup_across_pipelined_windows():
+    """Two identical windows submitted ahead of resolution: the second
+    joins the first's pending handle — one executor call total."""
+    calls = {"n": 0}
+
+    def orc(instruction, rows):
+        calls["n"] += 1
+        return [{"tag": f"t{len(str(r))}"} for r in rows]
+
+    db = IPDB()
+    # rows 0-3 and 4-7 render to identical inputs → identical windows
+    db.register_table("T", Table.from_rows(
+        [{"a": i, "txt": f"same{i % 4}"} for i in range(8)]))
+    db.register_oracle("orc", orc)
+    db.sql("CREATE LLM MODEL m PATH 'oracle:orc' ON PROMPT")
+    db.set_option("chunk_size", 4)
+    db.set_option("inflight_windows", 2)
+    r = db.sql("SELECT a, LLM m (PROMPT 'get {tag VARCHAR} of {{txt}}') "
+               "AS t FROM T")
+    assert len(r.table) == 8
+    assert calls["n"] == 1                 # one oracle dispatch
+    assert r.stats.llm_calls == 1          # second window joined in flight
+    assert r.stats.inflight_dedup_hits >= 1
+    # both windows resolved to the same values
+    tags = list(r.table.column("t"))
+    assert tags[:4] == tags[4:]
+
+
+def test_prompt_cache_lru_eviction():
+    """Eviction is LRU, not FIFO: touching an entry on get keeps it alive
+    past an eviction that would have rotated it out."""
+    from repro.core.predict import _MISS, PromptCache
+    pc = PromptCache(max_entries=3)
+    pc.put(("a",), [1])
+    pc.put(("b",), [2])
+    pc.put(("c",), [3])
+    assert pc.get(("a",)) == [1]           # touch: "a" becomes MRU
+    pc.put(("d",), [4])                    # evicts LRU = "b", not "a"
+    assert pc.get(("a",)) == [1]
+    assert pc.get(("b",)) is _MISS
+    assert pc.get(("c",)) == [3]
+    assert pc.get(("d",)) == [4]
+    # re-putting an existing key must not evict anything
+    pc.put(("c",), [30])
+    assert pc.get(("a",)) == [1] and pc.get(("d",)) == [4]
+    assert len(pc) == 3
 
 
 def test_cross_query_prompt_cache():

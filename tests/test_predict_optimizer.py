@@ -111,6 +111,21 @@ def test_retry_and_fallback_on_malformed():
     assert r.stats.retries > 0 or r.stats.batch_fallbacks > 0
 
 
+def test_aggregate_retries_on_malformed():
+    """Semantic aggregates go through the same strict-retry path as batch
+    predicts: a malformed response is retried (and counted) instead of
+    being given up on after one attempt."""
+    db = make_db(n_rows=8, malform_rate=1.0)
+    r = db.sql("SELECT category, LLM AGG m (PROMPT 'summarize the "
+               "{vendor VARCHAR} of the {{name}}s') AS v "
+               "FROM Product GROUP BY category")
+    assert len(r.table) == 2                   # CPU / PSU groups
+    # every attempt malformed: retry_limit retries per group were burned
+    assert r.stats.retries == 2 * 2
+    assert r.stats.llm_calls == 2 * 3          # initial + 2 retries each
+    assert all(v is None for v in r.table.column("v"))
+
+
 def test_refusal_degrades_gracefully():
     db = make_db(n_rows=6, refusal_rate=1.0)
     r = db.sql("SELECT LLM m (PROMPT 'get {vendor VARCHAR} of {{name}}') AS v "

@@ -1,0 +1,207 @@
+"""InferenceService: queue batching, in-flight dedup, cancellation,
+dispatch-group makespan accounting, and the JAX continuous-batching
+dispatch path (one batcher run replaces N sequential generate calls)."""
+import json
+
+import pytest
+
+from repro.core.database import IPDB
+from repro.core.executors import CallResult, Predictor
+from repro.core.service import (InferenceRequest, InferenceService,
+                                makespan)
+from repro.relational.table import Table
+
+
+class CountingExecutor(Predictor):
+    """Fake backend: constant answer, 0.5 s modeled latency per call."""
+    name = "counting"
+
+    def __init__(self):
+        self.options = {}
+        self.batches = []              # dispatch sizes, in order
+
+    def complete(self, prompt, schema, num_rows, *, shared_prefix="",
+                 rows=None, instruction=""):
+        return CallResult(json.dumps({"x": 1}), 1, 1, 0.5, 0.0)
+
+    def complete_many(self, prompts, schema, num_rows_list, *,
+                      shared_prefix="", rows_list=None, instruction=""):
+        self.batches.append(len(prompts))
+        return [self.complete(p, schema, nr)
+                for p, nr in zip(prompts, num_rows_list)]
+
+
+def _req(ex, prompt, *, instruction="i", dedup=True):
+    return InferenceRequest(
+        model_name="m", instruction=instruction, prompt=prompt,
+        schema=(("x", "INTEGER"),), num_rows=1, executor=ex,
+        dedup=dedup)
+
+
+def test_submit_flush_batches_one_queue():
+    svc = InferenceService()
+    ex = CountingExecutor()
+    g = svc.open_group(workers=2)
+    handles = svc.submit([_req(ex, f"p{i}") for i in range(5)])
+    assert svc.pending == 5 and not any(h.done for h in handles)
+    svc.flush()
+    assert svc.pending == 0 and all(h.done for h in handles)
+    assert ex.batches == [5]           # one complete_many for the queue
+    assert svc.stats.dispatch_batches == 1
+    assert svc.stats.mean_batch_occupancy == 5.0
+    # group accounting: 5 calls of 0.5s on 2 workers -> greedy makespan
+    for h in handles:
+        g.latencies.append(h.result().sim_latency_s)
+    assert g.makespan() == pytest.approx(makespan([0.5] * 5, 2))
+    assert g.serial() == pytest.approx(2.5)
+
+
+def test_inflight_dedup_joins_pending_handle():
+    svc = InferenceService()
+    ex = CountingExecutor()
+    h1, o1 = svc.submit_one(_req(ex, "a"))
+    h2, o2 = svc.submit_one(_req(ex, "a"))    # identical, still pending
+    assert o1 and not o2 and h2 is h1
+    assert svc.stats.inflight_dedup_hits == 1
+    svc.flush()
+    assert ex.batches == [1]
+    assert h1.result().text == h2.result().text
+    # after resolution the request is no longer in flight: re-dispatches
+    h3, o3 = svc.submit_one(_req(ex, "a"))
+    assert o3 and h3 is not h1
+    svc.flush()
+    assert ex.batches == [1, 1]
+
+
+def test_dedup_disabled_never_joins():
+    svc = InferenceService()
+    ex = CountingExecutor()
+    h1, _ = svc.submit_one(_req(ex, "a", dedup=False))
+    h2, o2 = svc.submit_one(_req(ex, "a", dedup=False))
+    assert o2 and h2 is not h1
+    svc.flush()
+    assert ex.batches == [2]           # both dispatched
+
+
+def test_result_triggers_flush_and_cancel_drops_queued():
+    svc = InferenceService()
+    ex = CountingExecutor()
+    h1, _ = svc.submit_one(_req(ex, "a"))
+    h2, _ = svc.submit_one(_req(ex, "b"))
+    assert svc.cancel(h2)              # still queued: removable
+    assert h1.result().text            # implicit flush
+    assert ex.batches == [1]           # cancelled request never dispatched
+    assert not svc.cancel(h1)          # already resolved
+    with pytest.raises(RuntimeError):
+        h2.result()
+
+
+def test_executor_failure_does_not_poison_inflight():
+    """If the backend raises mid-dispatch, later identical submits must
+    re-dispatch rather than join a handle that can never resolve."""
+
+    class Flaky(CountingExecutor):
+        def __init__(self):
+            super().__init__()
+            self.fail = True
+
+        def complete_many(self, prompts, *a, **kw):
+            if self.fail:
+                self.fail = False
+                raise RuntimeError("backend down")
+            return super().complete_many(prompts, *a, **kw)
+
+    svc = InferenceService()
+    ex = Flaky()
+    svc.submit_one(_req(ex, "a"))
+    with pytest.raises(RuntimeError):
+        svc.flush()
+    h, owned = svc.submit_one(_req(ex, "a"))
+    assert owned                       # fresh handle, not a join
+    svc.flush()
+    assert h.done and h.result().text
+
+
+def test_cancel_is_refcounted_with_joiners():
+    """Cancelling one submitter of a shared handle keeps the request
+    queued for the joiner; only the last cancel drops it."""
+    svc = InferenceService()
+    ex = CountingExecutor()
+    h1, _ = svc.submit_one(_req(ex, "a"))
+    h2, o2 = svc.submit_one(_req(ex, "a"))
+    assert h2 is h1 and not o2
+    assert not svc.cancel(h1)          # joiner still interested
+    assert svc.pending == 1
+    assert svc.cancel(h2)              # last reference released
+    assert svc.pending == 0
+    svc.flush()
+    assert ex.batches == []            # nothing was dispatched
+
+
+def test_separate_instructions_separate_batches_and_max_dispatch():
+    svc = InferenceService(max_dispatch=2)
+    ex = CountingExecutor()
+    svc.submit([_req(ex, f"p{i}", instruction="i1") for i in range(5)])
+    svc.submit([_req(ex, "q", instruction="i2")])
+    svc.drain()
+    # i1 queue split into 2+2+1 by the dispatch cap, i2 alone
+    assert sorted(ex.batches) == [1, 1, 2, 2]
+
+
+# ---------------------------------------------------------------------------
+def test_jax_batched_dispatch_single_batcher_run(monkeypatch):
+    """A jax: model query dispatches its marshaled prompts through ONE
+    ContinuousBatcher.run instead of N sequential engine.generate calls."""
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.scheduler import ContinuousBatcher
+
+    calls = {"run": 0, "run_sizes": [], "generate": 0}
+    orig_run = ContinuousBatcher.run
+    orig_gen = InferenceEngine.generate
+
+    def spy_run(self, requests, **kw):
+        calls["run"] += 1
+        calls["run_sizes"].append(len(requests))
+        return orig_run(self, requests, **kw)
+
+    def spy_gen(self, prompts, **kw):
+        calls["generate"] += 1
+        return orig_gen(self, prompts, **kw)
+
+    monkeypatch.setattr(ContinuousBatcher, "run", spy_run)
+    monkeypatch.setattr(InferenceEngine, "generate", spy_gen)
+
+    d = IPDB()
+    d.register_table("Items", Table.from_rows(
+        [{"name": f"item{i}"} for i in range(4)]))
+    d.sql("CREATE LLM MODEL tiny PATH 'jax:olmo-1b' ON PROMPT "
+          "OPTIONS { 'batch_size': 2, 'max_str': 6 }")
+    r = d.sql("SELECT name, LLM tiny (PROMPT 'guess the {color VARCHAR} "
+              "of {{name}}') AS color FROM Items")
+    assert len(r.table) == 4
+    assert all(isinstance(c, str) for c in r.table.column("color"))
+    # 4 rows / batch_size 2 -> 2 marshaled prompts -> ONE batched run
+    assert calls["run"] == 1 and calls["run_sizes"] == [2]
+    assert calls["generate"] == 0
+    assert r.stats.llm_calls == 2
+    assert r.stats.dispatch_batches == 1
+    assert r.stats.mean_batch_occupancy == pytest.approx(2.0)
+
+
+def test_semantic_join_reports_batch_occupancy():
+    """The semantic-join dispatch pattern fills service batches: mean
+    occupancy across complete_many dispatches is > 1."""
+    db = IPDB()
+    db.register_table("L", Table.from_rows(
+        [{"lid": i, "ltxt": f"left {i}"} for i in range(6)]))
+    db.register_table("R", Table.from_rows(
+        [{"rid": i, "rtxt": f"right {i}"} for i in range(6)]))
+    db.register_oracle("orc", lambda ins, rows: [
+        {"match": (str(r.get("ltxt", ""))[-1] == str(r.get("rtxt", ""))[-1])}
+        for r in rows])
+    db.sql("CREATE LLM MODEL m PATH 'oracle:orc' ON PROMPT")
+    r = db.sql("SELECT lid, rid FROM L JOIN R ON "
+               "LLM m (PROMPT 'is {{ltxt}} {match BOOLEAN} with {{rtxt}}')")
+    assert len(r.table) == 6               # diagonal matches
+    assert r.stats.dispatch_batches >= 1
+    assert r.stats.mean_batch_occupancy > 1.0

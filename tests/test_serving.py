@@ -56,6 +56,38 @@ def test_continuous_batcher_all_complete(engine):
             json.loads(r.text)
 
 
+def test_continuous_batcher_more_requests_than_slots(engine):
+    """Slot refill: with far more requests than decode slots, every
+    request still completes and the original order is preserved."""
+    g = JsonGrammar([Field("v", "INTEGER")])
+    reqs = [Request(prompt=f"number {i}", grammar=g, max_new_tokens=64)
+            for i in range(7)]
+    cb = ContinuousBatcher(engine, num_slots=2)
+    done = cb.run(reqs)
+    assert len(done) == 7
+    assert [r.rid for r in done] == list(range(7))
+    assert all(r.text is not None for r in done)
+    for r in done:
+        if not r.error:
+            json.loads(r.text)
+
+
+def test_continuous_batcher_token_budget_eviction(engine):
+    """A request exceeding its token budget is evicted with `error` set
+    (partial text kept) without stalling the rest of the batch."""
+    g = JsonGrammar([Field("s", "VARCHAR")], max_str=8)
+    reqs = [Request(prompt=f"word {i}", grammar=g, max_new_tokens=48)
+            for i in range(4)]
+    reqs[1].max_new_tokens = 2         # cannot finish the JSON grammar
+    cb = ContinuousBatcher(engine, num_slots=2)
+    done = cb.run(reqs)
+    assert done[1].error and "budget" in done[1].error
+    assert done[1].text is not None    # evicted, not lost
+    for i in (0, 2, 3):
+        assert done[i].error is None
+        json.loads(done[i].text)
+
+
 def test_pallas_sampler_matches_numpy():
     cfg = C.get_smoke_config("olmo-1b").replace(vocab_size=259)
     e1 = InferenceEngine(cfg, max_len=128, seed=5, use_pallas_sampler=False)
