@@ -1,12 +1,18 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Set IPDB_BENCH_QUICK=1 for the
-reduced-size pass (used by CI/test_output runs); the full pass reproduces
-the paper-scale ratios.
+Prints ``name,us_per_call,derived`` CSV and writes a machine-readable
+``BENCH_results.json`` (name → us_per_call/derived, plus quick-mode flag
+and git SHA) so the perf trajectory can be tracked across PRs.  Set
+IPDB_BENCH_QUICK=1 for the reduced-size pass (used by CI/test_output
+runs); the full pass reproduces the paper-scale ratios.  ``--only``
+filters modules by label substring (comma-separated).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
+import subprocess
 import sys
 import time
 import traceback
@@ -21,28 +27,65 @@ MODULES = [
     ("marshal_parallel_F5", "benchmarks.bench_marshal_parallel"),
     ("pullup_F6", "benchmarks.bench_pullup"),
     ("join_ordering_F7", "benchmarks.bench_join_ordering"),
+    ("adaptive_stats", "benchmarks.bench_adaptive"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline"),
 ]
 
 
-def main() -> None:
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def main(argv=None) -> None:
     import importlib
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="",
+                    help="comma-separated label substrings to run")
+    ap.add_argument("--json", default="BENCH_results.json",
+                    help="path for the machine-readable results "
+                         "('' disables)")
+    args = ap.parse_args(argv)
     quick = os.environ.get("IPDB_BENCH_QUICK", "0") == "1"
+    wanted = [w for w in args.only.split(",") if w]
+    unmatched = [w for w in wanted
+                 if not any(w in label for label, _ in MODULES)]
+    if unmatched:
+        sys.exit(f"--only tokens match no benchmark module: {unmatched} "
+                 f"(labels: {[label for label, _ in MODULES]})")
+    modules = [m for m in MODULES
+               if not wanted or any(w in m[0] for w in wanted)]
     print("name,us_per_call,derived")
+    results = {}
     failures = 0
-    for label, modname in MODULES:
+    for label, modname in modules:
         t0 = time.time()
         try:
             mod = importlib.import_module(modname)
             rows = mod.run(quick=quick)
             for name, us, derived in rows:
                 print(f"{name},{us},{derived}", flush=True)
+                results[name] = {"us_per_call": us, "derived": derived}
             print(f"# {label} done in {time.time()-t0:.1f}s", flush=True)
         except Exception as e:
             failures += 1
             print(f"{label}.ERROR,,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"quick": quick, "git_sha": _git_sha(),
+                       "failures": failures, "results": results}, f,
+                      indent=2, sort_keys=True)
+        print(f"# wrote {args.json} ({len(results)} results)", flush=True)
+    if not results:
+        sys.exit("benchmarks produced no output")
     if failures:
         sys.exit(1)
 

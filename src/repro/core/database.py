@@ -22,6 +22,8 @@ from repro.core.executors import (JaxExecutor, OracleExecutor, Predictor,
 from repro.core.optimizer import DEFAULT_FLAGS, Optimizer
 from repro.core.predict import PredictOperator, PromptCache
 from repro.core.service import InferenceService
+from repro.core.stats import (CostModel, PilotSampler, StatisticsStore,
+                              stats_section)
 from repro.relational.binder import Binder
 from repro.relational.catalog import Catalog, ModelEntry
 from repro.relational.executor import ExecStats, PlanExecutor
@@ -45,6 +47,10 @@ class IPDB:
             "batch_size": 16, "n_threads": 16, "use_batching": True,
             "use_dedup": True, "rate_limit_rpm": 0.0,
             "inflight_windows": 1, "max_dispatch_calls": 0,
+            # adaptive statistics: pilot-sample predicates with no history
+            # at optimize time (only when the input is ≳4× the sample —
+            # override with pilot_min_rows — so the pilot cost amortizes)
+            "enable_pilot": True, "pilot_sample_rows": 16,
             **DEFAULT_FLAGS,
         }
         if session_options:
@@ -57,9 +63,14 @@ class IPDB:
         # cross-query prompt cache: shared by every predict operator this
         # database creates (keyed by model + instruction + input tuple)
         self.prompt_cache = PromptCache()
+        # adaptive statistics: per-(model, instruction) observed
+        # selectivity / tokens / latency / retry rates, persisting across
+        # queries exactly like the prompt cache
+        self.stats_store = StatisticsStore()
         # one inference service per session: every predict operator routes
-        # its dispatch through it (batching, in-flight dedup, scheduling)
-        self.inference_service = InferenceService()
+        # its dispatch through it (batching, in-flight dedup, scheduling);
+        # dispatched calls feed the statistics store
+        self.inference_service = InferenceService(stats_store=self.stats_store)
 
     # -- registration ---------------------------------------------------
     def register_table(self, name: str, t: Table) -> None:
@@ -110,7 +121,8 @@ class IPDB:
         info = dataclasses.replace(info, options=merged)
         return PredictOperator(info, self._make_executor(entry), self.options,
                                prompt_cache=self.prompt_cache,
-                               service=self.inference_service)
+                               service=self.inference_service,
+                               stats_store=self.stats_store)
 
     # -- entry point -------------------------------------------------------
     def sql(self, query: str, *, explain: bool = False) -> QueryResult:
@@ -143,29 +155,52 @@ class IPDB:
                     o.get("max_dispatch_calls", 0),
                     o.get("use_dedup", True), o.get("use_batching", True)))
 
+    def _stats_repr(self, plan: Node) -> str:
+        return stats_section(plan, self.stats_store,
+                             CostModel(self.stats_store, self.options))
+
+    def _make_pilot(self) -> Optional[PilotSampler]:
+        if not bool(self.options.get("enable_pilot", True)):
+            return None
+        min_rows = self.options.get("pilot_min_rows")
+        return PilotSampler(
+            self._predict_factory, self.stats_store,
+            sample_rows=int(self.options.get("pilot_sample_rows", 16)),
+            min_table_rows=None if min_rows is None else int(min_rows))
+
     def explain(self, query: str) -> str:
         stmt = parse_sql(query)
         assert isinstance(stmt, SelectStmt)
         plan = Binder(self.catalog, self.options).bind_select(stmt)
-        opt = Optimizer(self.catalog, self.options).optimize(plan)
+        # no pilot sampling from EXPLAIN: explaining must stay side-effect
+        # free; estimates use whatever the store has already observed
+        opt = Optimizer(self.catalog, self.options,
+                        stats=self.stats_store).optimize(plan)
         ex = PlanExecutor(self.catalog, self._predict_factory,
                           chunk_size=int(self.options.get("chunk_size", 2048)))
         return ("-- logical --\n" + plan_repr(plan)
                 + "\n-- optimized --\n" + plan_repr(opt)
                 + "\n-- physical --\n" + ex.physical_plan(opt)
-                + "\n-- dispatch --\n" + self._dispatch_repr())
+                + "\n-- dispatch --\n" + self._dispatch_repr()
+                + "\n-- stats --\n" + self._stats_repr(opt))
 
     def _run_select(self, stmt: SelectStmt, explain: bool) -> QueryResult:
         t0 = time.time()
         plan = Binder(self.catalog, self.options).bind_select(stmt)
-        plan = Optimizer(self.catalog, self.options).optimize(plan)
+        svc = self.inference_service
+        # apply the dispatch cap BEFORE optimizing: pilot sampling inside
+        # optimize() dispatches through the service too
+        svc.max_dispatch = int(self.options.get("max_dispatch_calls", 0))
+        pilot = self._make_pilot()
+        plan = Optimizer(self.catalog, self.options, stats=self.stats_store,
+                         pilot=pilot).optimize(plan)
         ex = PlanExecutor(self.catalog, self._predict_factory,
-                          chunk_size=int(self.options.get("chunk_size", 2048)))
+                          chunk_size=int(self.options.get("chunk_size", 2048)),
+                          stats_store=self.stats_store)
         plan_text = (plan_repr(plan) + "\n-- physical --\n"
                      + ex.physical_plan(plan) + "\n-- dispatch --\n"
-                     + self._dispatch_repr()) if explain else None
-        svc = self.inference_service
-        svc.max_dispatch = int(self.options.get("max_dispatch_calls", 0))
+                     + self._dispatch_repr() + "\n-- stats --\n"
+                     + self._stats_repr(plan)) if explain else None
         before = dataclasses.replace(svc.stats)
         table = ex.run(plan)
         st = ex.stats
@@ -176,6 +211,13 @@ class IPDB:
                                    if st.dispatch_batches else 0.0)
         st.inflight_dedup_hits = svc.stats.inflight_dedup_hits \
             - before.inflight_dedup_hits
+        if pilot is not None and pilot.calls:
+            # pilot work is part of the query's honest accounting: calls
+            # are kept in their own counter, tokens/latency join the totals
+            st.pilot_calls = pilot.calls
+            st.in_tokens += pilot.in_tokens
+            st.out_tokens += pilot.out_tokens
+            st.sim_latency_s += pilot.sim_latency_s
         st.wall_s = time.time() - t0
         self.last_stats = st
         return QueryResult(table, st, plan_text)

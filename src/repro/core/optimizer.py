@@ -25,6 +25,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.stats import CostModel, PilotSampler, StatisticsStore
 from repro.relational.catalog import Catalog
 from repro.relational.expr import (BinOp, Col, Expr, PredictExpr,
                                    PromptTemplate, find_predicts)
@@ -63,23 +64,33 @@ def _cols_of(e: Expr) -> set:
 
 
 class Optimizer:
-    def __init__(self, catalog: Catalog, flags: Dict[str, bool] = None):
+    def __init__(self, catalog: Catalog, flags: Dict[str, bool] = None, *,
+                 stats: Optional[StatisticsStore] = None,
+                 cost_model: Optional[CostModel] = None,
+                 pilot: Optional[PilotSampler] = None):
         self.cat = catalog
+        self.session = dict(flags or {})
         self.flags = dict(DEFAULT_FLAGS)
         if flags:
             self.flags.update({k: v for k, v in flags.items()
                                if k in DEFAULT_FLAGS})
+        self.stats = stats if stats is not None else StatisticsStore()
+        self.cost = cost_model if cost_model is not None else \
+            CostModel(self.stats, self.session)
+        self.pilot = pilot
+        self._filter_used = set()
 
     # ------------------------------------------------------------------
     def optimize(self, plan: Node) -> Node:
         plan = self._split_filters(plan)
+        # outputs referenced by Filters = selective predicts.  Computed for
+        # EVERY rule pass (merge uses it to avoid fusing two highly
+        # selective selects, §6.6 caveat) — not only when merge is enabled.
+        self._filter_used = set()
+        for x in _walk(plan):
+            if isinstance(x, Filter):
+                self._filter_used |= _cols_of(x.predicate)
         if self.flags["enable_merge"]:
-            # outputs referenced by Filters = selective predicts; merging two
-            # highly selective semantic selects hurts (paper §6.6 caveat)
-            self._filter_used = set()
-            for x in _walk(plan):
-                if isinstance(x, Filter):
-                    self._filter_used |= _cols_of(x.predicate)
             plan = self._merge_predicts(plan)
         if self.flags["enable_pullup"]:
             for _ in range(8):                    # to fixpoint (bounded)
@@ -91,6 +102,7 @@ class Optimizer:
             plan = self._semantic_select_vs_join(plan)
         if self.flags["enable_select_order"]:
             plan = self._order_semantic_selects(plan)
+        plan = self._annotate_selectivities(plan)
         return self._annotate_cardinalities(plan)
 
     # -- helpers --------------------------------------------------------
@@ -200,8 +212,10 @@ class Optimizer:
         return n
 
     # -- rule: semantic select vs join ordering (§6.5) ---------------------
-    def _distinct_count(self, plan: Node, cols: List[str]) -> Optional[float]:
-        """Real distinct-value statistics when the subplan is cheap-only."""
+    def _cheap_table(self, plan: Node):
+        """Execute a subplan containing no inference (cheap relational
+        prefix) and return its Table; None when the subplan is not cheap
+        or fails."""
         for x in _walk(plan):
             if isinstance(x, (Predict, SemanticJoin)):
                 return None
@@ -210,18 +224,24 @@ class Optimizer:
         try:
             from repro.relational.executor import PlanExecutor
             ex = PlanExecutor(self.cat, predict_factory=None)
-            t = ex.run(plan)
-            if len(t) == 0:
-                return 0.0
-            vals = set()
-            arrs = [t.column(c) for c in cols if c in t.cols]
-            if not arrs:
-                return None
-            for i in range(len(t)):
-                vals.add(tuple(a[i] for a in arrs))
-            return float(len(vals))
+            return ex.run(plan)
         except Exception:
             return None
+
+    def _distinct_count(self, plan: Node, cols: List[str]) -> Optional[float]:
+        """Real distinct-value statistics when the subplan is cheap-only."""
+        t = self._cheap_table(plan)
+        if t is None:
+            return None
+        if len(t) == 0:
+            return 0.0
+        arrs = [t.column(c) for c in cols if c in t.cols]
+        if not arrs:
+            return None
+        vals = set()
+        for i in range(len(t)):
+            vals.add(tuple(a[i] for a in arrs))
+        return float(len(vals))
 
     def _semantic_select_vs_join(self, n: Node) -> Node:
         n = self._map_children(n, self._semantic_select_vs_join)
@@ -242,9 +262,10 @@ class Optimizer:
                 d_side = self._distinct_count(side_plan, list(inputs))
                 d_join = self._distinct_count(join, list(inputs))
                 if d_side is not None and d_join is not None \
-                        and d_side < d_join:
-                    # push: fewer distinct inputs below the join (dedup makes
-                    # the above-join placement cost d_join calls)
+                        and self._placement_cost(pred_node, d_side) \
+                        < self._placement_cost(pred_node, d_join):
+                    # push: cheaper expected cost below the join (dedup makes
+                    # the above-join placement cost d_join distinct calls)
                     sub = Filter(Predict(side_plan, pred_node.info),
                                  n.predicate, n.selectivity)
                     if side == "left":
@@ -283,12 +304,22 @@ class Optimizer:
             return SemanticJoin(n.left, n.right, info)
         return n
 
+    def _placement_cost(self, pred_node: Predict,
+                        rows: float) -> Tuple[float, float, float]:
+        """Cost of running a semantic select over `rows` distinct inputs,
+        via the unified cost model: (expected calls, modeled makespan,
+        rows).  Rows break ties so marshaling (which quantizes calls by
+        batch_size) never hides a strictly smaller input — fewer distinct
+        rows always means fewer prompt tokens."""
+        est = self.cost.estimate(pred_node.info, rows,
+                                 self._fallback_tokens(pred_node))
+        return (est.expected_calls, est.makespan_s, rows)
+
     # -- rule: semantic select ordering (§7.10) ----------------------------
-    def _sem_unit_cost(self, f: Filter) -> Tuple[float, float]:
-        """(avg input tokens estimate, selectivity hint) of one semantic
-        select unit Filter(Predict(...))."""
-        p = f.child
-        assert isinstance(p, Predict)
+    def _fallback_tokens(self, p: Predict) -> float:
+        """Static per-call input-size estimate (instruction chars + sampled
+        column widths) — the cost model's fallback when the statistics
+        store has no observations for the predicate."""
         instr = len(p.info.prompt.raw) if p.info.prompt else 64
         sizes = []
         for c in p.info.inputs:
@@ -299,8 +330,7 @@ class Optimizer:
                              if len(vals) else 8.0)
             else:
                 sizes.append(16.0)
-        sel = float(p.info.options.get("selectivity_hint", 0.5))
-        return instr + sum(sizes), sel
+        return instr + sum(sizes)
 
     def _order_semantic_selects(self, n: Node) -> Node:
         n = self._map_children(n, self._order_semantic_selects)
@@ -323,11 +353,40 @@ class Optimizer:
                 return n
             if not set(p.info.inputs) <= base_schema:
                 return n
-        ranked = sorted(units, key=lambda fp: self._sem_unit_cost(fp[0]))
+        if self.pilot is not None:
+            # calibrate units with no history on a reservoir sample of the
+            # (cheap) stack input before committing to an order; the stack
+            # input is only materialized when some unit actually needs it
+            need = [(f, p) for f, p in units if self.pilot.wants(p.info)]
+            base_t = self._cheap_table(cur) if need else None
+            if base_t is not None and len(base_t):
+                for f, p in need:
+                    self.pilot.calibrate(f.predicate, p.info, base_t)
+        ranked = sorted(units, key=lambda fp: self.cost.rank(
+            fp[1].info, self._fallback_tokens(fp[1])))
         plan = cur
         for f, p in ranked:                 # cheapest wraps first → innermost
             plan = Filter(Predict(plan, p.info), f.predicate, f.selectivity)
         return plan
+
+    # -- pass: stats-informed selectivity annotation -----------------------
+    def _annotate_selectivities(self, n: Node) -> Node:
+        """Stamp semantic select units with the cost model's selectivity:
+        the Filter's planner estimate feeds est_rows propagation (and so
+        the est_in_rows/est_cross_rows cardinality annotations below),
+        and the Predict carries est_selectivity/sel_source for EXPLAIN.
+        Estimation only — never changes plan shape or results."""
+        n = self._map_children(n, self._annotate_selectivities)
+        if (isinstance(n, Filter) and not _is_cheap(n.predicate)
+                and isinstance(n.child, Predict)
+                and _cols_of(n.predicate) & set(n.child.info.out_cols)):
+            p = n.child
+            sel, src = self.cost.selectivity(p.info)
+            info = dataclasses.replace(
+                p.info, options={**p.info.options, "est_selectivity": sel,
+                                 "sel_source": src})
+            return Filter(Predict(p.child, info), n.predicate, sel)
+        return n
 
 
 def _walk(n: Node):

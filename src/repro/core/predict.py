@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.executors import CallResult, Predictor
 from repro.core.service import (DispatchGroup, InferenceHandle,
                                 InferenceRequest, InferenceService, makespan)
+from repro.core.stats import stats_key
 from repro.relational.plan import PredictInfo
 from repro.relational.table import Table, _coerce
 
@@ -206,7 +207,8 @@ class PredictOperator:
     def __init__(self, info: PredictInfo, executor: Predictor,
                  session_options: Dict[str, object],
                  prompt_cache: Optional[PromptCache] = None,
-                 service: Optional[InferenceService] = None):
+                 service: Optional[InferenceService] = None,
+                 stats_store=None):
         # --- configuration stage (precedence per §5.3) ---
         opts = dict(DEFAULTS)
         opts.update({k: v for k, v in session_options.items()
@@ -227,6 +229,10 @@ class PredictOperator:
         self.cache: Dict[Tuple, List[Optional[object]]] = {}
         self._ns = (info.model_name, self._instruction())
         self.stats = PredictStats()
+        # adaptive statistics: calls/tokens/latency are recorded by the
+        # service at dispatch; the operator records retries + fallbacks
+        self.stats_store = stats_store
+        self._skey = stats_key(info)
 
     def _cache_put(self, k: Tuple, v: List[Optional[object]]) -> None:
         # total parse failures are memoized for the operator's lifetime
@@ -267,7 +273,8 @@ class PredictOperator:
             prompt=prompt, schema=tuple(self.info.outputs),
             num_rows=nr if exact_rows else max(nr, 1),
             executor=self.executor, rows=rows,
-            dedup=bool(self.opts.get("use_dedup", True)))
+            dedup=bool(self.opts.get("use_dedup", True)),
+            stats_key=self._skey)
         handle, owned = self.service.submit_one(req)
         if not owned:
             self.stats.inflight_hits += 1
@@ -445,7 +452,7 @@ class PredictOperator:
             attempt = 0
             while parsed is None and attempt < retries:
                 attempt += 1
-                self.stats.retries += 1
+                self._note_retry()
                 stricter = (instr + _STRICT + self._render_rows(g) + suffix)
                 res = self._call_now(stricter, 1, g, instr, group)
                 parsed = parse_structured(res.text, self.info.outputs, 1)
@@ -468,14 +475,14 @@ class PredictOperator:
         attempt = 0
         while parsed is None and attempt < retries:
             attempt += 1
-            self.stats.retries += 1
+            self._note_retry()
             stricter = instr + _STRICT + self._render_rows(b.rows)
             res = self._call_now(stricter, nr, b.rows, instr, group)
             parsed = parse_structured(res.text, self.info.outputs, nr)
 
         if parsed is None and nr > 1:
             # §6.3: failed batch → per-tuple fallback, dispatched together
-            self.stats.batch_fallbacks += 1
+            self._note_fallback()
             subs = []
             for i, r in zip(b.idxs, b.rows):
                 prompt = instr + "\n" + self._render_rows([r])
@@ -492,3 +499,13 @@ class PredictOperator:
         self.stats.calls += 1
         self.stats.in_tokens += res.in_tokens
         self.stats.out_tokens += res.out_tokens
+
+    def _note_retry(self) -> None:
+        self.stats.retries += 1
+        if self.stats_store is not None:
+            self.stats_store.record_retry(self._skey)
+
+    def _note_fallback(self) -> None:
+        self.stats.batch_fallbacks += 1
+        if self.stats_store is not None:
+            self.stats_store.record_fallback(self._skey)

@@ -87,6 +87,9 @@ class InferenceRequest:
     rows: Optional[List[dict]] = None
     shared_prefix: str = ""
     dedup: bool = True                 # False: never join another handle
+    # statistics-store key ((model, raw instruction)); set by the predict
+    # operator so dispatch accounting can feed the adaptive cost model
+    stats_key: Optional[Tuple[str, str]] = None
 
     @property
     def queue_key(self) -> Tuple:
@@ -145,12 +148,15 @@ class InferenceService:
     operators can stack several windows of requests and have them
     dispatched as one batch per (model, instruction) queue."""
 
-    def __init__(self, *, max_dispatch: int = 0):
+    def __init__(self, *, max_dispatch: int = 0, stats_store=None):
         # queues preserve submission order (dict insertion order)
         self._queues: Dict[Tuple, List[InferenceHandle]] = {}
         self._inflight: Dict[Tuple, InferenceHandle] = {}
         self.max_dispatch = int(max_dispatch)   # 0 = unbounded batch
         self.stats = ServiceStats()
+        # optional adaptive StatisticsStore: every dispatched call records
+        # its tokens + modeled latency under the request's stats_key
+        self.stats_store = stats_store
 
     # -- submission ------------------------------------------------------
     def open_group(self, workers: int = 16, rpm: float = 0.0) -> DispatchGroup:
@@ -210,6 +216,10 @@ class InferenceService:
         self.stats.dispatched_calls += len(reqs)
         for h, res in zip(handles, results):
             h._result = res
+            if self.stats_store is not None and h.request.stats_key:
+                self.stats_store.record_call(
+                    h.request.stats_key, res.in_tokens, res.out_tokens,
+                    res.sim_latency_s)
 
     def drain(self) -> None:
         """Flush until no request remains queued."""

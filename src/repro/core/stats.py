@@ -1,0 +1,376 @@
+"""Adaptive statistics + cost model for the semantic optimizer.
+
+The paper's §6 reorderings (select ordering, select-vs-join, predict
+pull-up) only pay off when the optimizer knows predicate selectivities and
+per-call costs.  This module closes the loop:
+
+  StatisticsStore   database-owned, persists across queries (exactly like
+                    the cross-query PromptCache).  Per (model, instruction)
+                    key it accumulates observed selectivity (rows in vs
+                    rows passing the semantic predicate), input/output
+                    token counts, per-call modeled latency, and retry/
+                    fallback rates.  Fed by
+                      * the physical layer — FilterOp-over-PredictOp and
+                        SemanticJoinOp record predicate pass rates as
+                        chunks/windows resolve;
+                      * the InferenceService — every dispatched call
+                        records its tokens and modeled latency;
+                      * the PredictOperator — strict retries and per-tuple
+                        fallbacks.
+
+  CostModel         turns a store record (or, lacking one, the optimizer's
+                    static hints) into a CostEstimate: expected calls ×
+                    tokens × per-call latency, reduced through the same
+                    greedy worker-pool + rate-limit makespan model the
+                    executor reports (`service.makespan`).  The optimizer
+                    ranks commuting semantic selects by the classic
+                    cost/(1 - selectivity) rule, which minimizes expected
+                    stack cost (and, at uniform per-call cost, expected
+                    call count).
+
+  PilotSampler      for predicates with NO history the optimizer dispatches
+                    a small deterministic reservoir sample (default 16
+                    rows) through the normal PredictOperator path at
+                    optimize time.  Answers land in the cross-query
+                    PromptCache, so pilot work is never wasted; pilot calls
+                    are accounted separately (`ExecStats.pilot_calls`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.executors import default_latency_model
+from repro.core.service import makespan
+
+__all__ = ["stats_key", "PredicateStats", "StatisticsStore", "CostEstimate",
+           "CostModel", "PilotSampler", "expected_stack_cost", "order_rank",
+           "stats_section"]
+
+
+def stats_key(info) -> Tuple[str, str]:
+    """Store key for a PredictInfo: (model, raw instruction).  Uses the
+    user-written instruction (not the fully rendered prompt preamble) so
+    the key is stable across schema-preamble tweaks."""
+    instr = info.prompt.instruction if info.prompt else \
+        "predict " + ", ".join(n for n, _ in info.outputs)
+    return (info.model_name, instr)
+
+
+@dataclasses.dataclass
+class PredicateStats:
+    """Accumulated observations for one (model, instruction) key."""
+    rows_in: int = 0          # predicate inputs observed
+    rows_passed: int = 0      # inputs that satisfied the predicate
+    calls: int = 0            # executor calls dispatched
+    in_tokens: int = 0
+    out_tokens: int = 0
+    latency_s: float = 0.0    # sum of per-call modeled latencies
+    retries: int = 0
+    fallbacks: int = 0
+    pilot_calls: int = 0      # subset of `calls` made by pilot sampling
+    pilot_rows: int = 0       # subset of `rows_in` observed by pilots
+
+    @property
+    def selectivity(self) -> Optional[float]:
+        if self.rows_in <= 0:
+            return None
+        return self.rows_passed / self.rows_in
+
+    @property
+    def mean_in_tokens(self) -> Optional[float]:
+        return self.in_tokens / self.calls if self.calls else None
+
+    @property
+    def mean_out_tokens(self) -> Optional[float]:
+        return self.out_tokens / self.calls if self.calls else None
+
+    @property
+    def mean_latency_s(self) -> Optional[float]:
+        return self.latency_s / self.calls if self.calls else None
+
+    @property
+    def retry_rate(self) -> float:
+        return self.retries / self.calls if self.calls else 0.0
+
+    @property
+    def fallback_rate(self) -> float:
+        return self.fallbacks / self.calls if self.calls else 0.0
+
+
+class StatisticsStore:
+    """Cross-query observation store, owned by the database (a sibling of
+    `IPDB.prompt_cache`).  All writers go through the record_* methods so
+    a future persistent backend only has one surface to replace."""
+
+    def __init__(self):
+        self._d: Dict[Tuple[str, str], PredicateStats] = {}
+
+    def entry(self, key: Tuple[str, str]) -> PredicateStats:
+        rec = self._d.get(key)
+        if rec is None:
+            rec = self._d[key] = PredicateStats()
+        return rec
+
+    def get(self, key: Tuple[str, str]) -> Optional[PredicateStats]:
+        return self._d.get(key)
+
+    def keys(self) -> Iterable[Tuple[str, str]]:
+        return self._d.keys()
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    # -- writers ---------------------------------------------------------
+    def record_call(self, key, in_tokens: int, out_tokens: int,
+                    latency_s: float, *, pilot: bool = False) -> None:
+        rec = self.entry(key)
+        rec.calls += 1
+        rec.in_tokens += int(in_tokens)
+        rec.out_tokens += int(out_tokens)
+        rec.latency_s += float(latency_s)
+        if pilot:
+            rec.pilot_calls += 1
+
+    def record_predicate(self, key, rows_in: int, rows_passed: int, *,
+                         pilot: bool = False) -> None:
+        rec = self.entry(key)
+        rec.rows_in += int(rows_in)
+        rec.rows_passed += int(rows_passed)
+        if pilot:
+            rec.pilot_rows += int(rows_in)
+
+    def record_retry(self, key) -> None:
+        self.entry(key).retries += 1
+
+    def record_fallback(self, key) -> None:
+        self.entry(key).fallbacks += 1
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CostEstimate:
+    selectivity: float
+    sel_source: str           # observed | hint | default
+    expected_calls: float
+    per_call_s: float
+    in_tokens: float          # expected total
+    out_tokens: float
+    makespan_s: float
+
+
+def expected_stack_cost(n_rows: float,
+                        units: Sequence[Tuple[float, float]]) -> float:
+    """Expected cost of running a stack of commuting semantic selects in
+    the given order: units = [(per_row_cost, selectivity), ...], unit 0
+    executed first.  Each unit pays its per-row cost on the rows surviving
+    the units before it."""
+    total, rows = 0.0, float(n_rows)
+    for cost, sel in units:
+        total += rows * cost
+        rows *= min(max(float(sel), 0.0), 1.0)
+    return total
+
+
+def order_rank(per_row_cost: float, selectivity: float) -> float:
+    """Rank metric for ordering commuting selects: ascending
+    cost/(1 - selectivity) minimizes `expected_stack_cost` (standard
+    exchange argument); at uniform cost it reduces to ascending
+    selectivity, which minimizes expected call count."""
+    return per_row_cost / max(1e-6, 1.0 - min(max(selectivity, 0.0), 1.0))
+
+
+class CostModel:
+    """Unified cost model over a StatisticsStore.  Observed statistics win;
+    static hints (`selectivity_hint`, caller-provided token estimates) are
+    the fallback, so a cold store reproduces the old heuristics exactly."""
+
+    #: below this many observed predicate inputs the store is not trusted
+    MIN_OBS_ROWS = 1
+
+    def __init__(self, store: Optional[StatisticsStore],
+                 options: Optional[Dict[str, object]] = None):
+        self.store = store if store is not None else StatisticsStore()
+        self.opts = dict(options or {})
+
+    # -- components ------------------------------------------------------
+    def selectivity(self, info) -> Tuple[float, str]:
+        rec = self.store.get(stats_key(info))
+        if rec is not None and rec.rows_in >= self.MIN_OBS_ROWS:
+            return float(rec.selectivity), "observed"
+        hint = (info.options or {}).get("selectivity_hint")
+        if hint is not None:
+            return float(hint), "hint"
+        return 0.5, "default"
+
+    def per_call(self, info, fallback_in_tokens: Optional[float] = None
+                 ) -> Tuple[float, float, float]:
+        """(in_tokens, out_tokens, modeled latency) per executor call."""
+        rec = self.store.get(stats_key(info))
+        if rec is not None and rec.calls > 0:
+            return (rec.mean_in_tokens, rec.mean_out_tokens,
+                    rec.mean_latency_s)
+        in_t = float(fallback_in_tokens) if fallback_in_tokens is not None \
+            else 64.0
+        out_t = 4.0 * max(1, len(info.outputs))
+        return in_t, out_t, default_latency_model(in_t, out_t)
+
+    def _calls_for(self, info, rows: float) -> float:
+        bs = 1.0
+        if bool(self.opts.get("use_batching", True)):
+            bs = float((info.options or {}).get(
+                "batch_size", self.opts.get("batch_size", 16)))
+        rec = self.store.get(stats_key(info))
+        inflate = 1.0 + (rec.retry_rate + rec.fallback_rate
+                         if rec is not None and rec.calls else 0.0)
+        return math.ceil(max(0.0, rows) / max(1.0, bs)) * inflate
+
+    def _makespan(self, n_calls: float, per_call_s: float) -> float:
+        workers = max(1, int(self.opts.get("n_threads", 16)))
+        rpm = float(self.opts.get("rate_limit_rpm", 0.0) or 0.0)
+        n = int(math.ceil(n_calls))
+        if n <= 0:
+            return 0.0
+        cap = 10_000
+        if n <= cap:
+            return makespan([per_call_s] * n, workers, rpm)
+        # identical latencies → makespan scales linearly past the cap
+        return makespan([per_call_s] * cap, workers, rpm) * (n / cap)
+
+    # -- API -------------------------------------------------------------
+    def estimate(self, info, est_in_rows: float,
+                 fallback_in_tokens: Optional[float] = None) -> CostEstimate:
+        sel, src = self.selectivity(info)
+        in_t, out_t, lat = self.per_call(info, fallback_in_tokens)
+        calls = self._calls_for(info, est_in_rows)
+        return CostEstimate(
+            selectivity=sel, sel_source=src, expected_calls=calls,
+            per_call_s=lat, in_tokens=calls * in_t, out_tokens=calls * out_t,
+            makespan_s=self._makespan(calls, lat))
+
+    def rank(self, info, fallback_in_tokens: Optional[float] = None
+             ) -> Tuple[float, float, float]:
+        """Sort key for commuting semantic selects (ascending = run
+        first).  Primary: cost/(1-selectivity); ties broken by the static
+        token estimate then selectivity.  On a cold store with no
+        selectivity hints every unit gets sel=0.5, so the primary key is
+        monotone in the token estimate and the ordering matches the old
+        size heuristic; an explicit selectivity_hint now (correctly)
+        participates in the cost rank instead of only breaking ties."""
+        sel, _ = self.selectivity(info)
+        _, _, lat = self.per_call(info, fallback_in_tokens)
+        fb = float(fallback_in_tokens) if fallback_in_tokens is not None \
+            else 64.0
+        return (order_rank(lat, sel), fb, sel)
+
+
+# ---------------------------------------------------------------------------
+class PilotSampler:
+    """Optimize-time selectivity calibration for predicates with no
+    history.  Runs a deterministic reservoir sample of the predicate's
+    input through the normal PredictOperator path (same InferenceService,
+    same PromptCache — sampled answers are re-used by the real execution),
+    then records the observed pass rate in the store."""
+
+    def __init__(self, predict_factory, store: StatisticsStore, *,
+                 sample_rows: int = 16, min_table_rows: Optional[int] = None):
+        self.predict_factory = predict_factory
+        self.store = store
+        self.sample_rows = max(1, int(sample_rows))
+        # a pilot over most of the input defeats its purpose: only sample
+        # when the table is several times larger than the sample
+        self.min_table_rows = (4 * self.sample_rows if min_table_rows is None
+                               else int(min_table_rows))
+        self.calls = 0
+        self.in_tokens = 0
+        self.out_tokens = 0
+        self.sim_latency_s = 0.0
+
+    def _sample_idx(self, n: int, key) -> np.ndarray:
+        h = hashlib.sha256(("pilot:" + repr(key)).encode()).digest()
+        rng = np.random.default_rng(int.from_bytes(h[:8], "little"))
+        return np.sort(rng.choice(n, size=self.sample_rows, replace=False))
+
+    def wants(self, info) -> bool:
+        """True when a pilot could teach us something about `info`: no
+        predicate history in the store yet."""
+        if self.predict_factory is None:
+            return False
+        rec = self.store.get(stats_key(info))
+        return rec is None or rec.rows_in == 0
+
+    def calibrate(self, predicate, info, base_table) -> bool:
+        """Sample `base_table`, run `info`'s predict over the sample,
+        evaluate `predicate` on the result and record the pass rate.
+        Returns True when a pilot actually ran."""
+        if not self.wants(info):
+            return False               # history exists — nothing to learn
+        key = stats_key(info)
+        n = len(base_table)
+        if n <= max(self.min_table_rows, self.sample_rows):
+            return False               # cannot amortize the pilot cost
+        sample = base_table.take(self._sample_idx(n, key))
+        op = self.predict_factory(info)
+        out = op(sample)
+        mask = np.asarray(predicate.evaluate(out), bool)
+        self.store.record_predicate(key, len(out), int(mask.sum()),
+                                    pilot=True)
+        self.store.entry(key).pilot_calls += op.stats.calls
+        self.calls += op.stats.calls
+        self.in_tokens += op.stats.in_tokens
+        self.out_tokens += op.stats.out_tokens
+        self.sim_latency_s += op.stats.sim_latency_s
+        return True
+
+
+# ---------------------------------------------------------------------------
+def stats_section(plan, store: StatisticsStore,
+                  cost_model: CostModel) -> str:
+    """EXPLAIN `-- stats --` body: one line per Predict/SemanticJoin node,
+    estimated selectivity/cost next to the store's observations."""
+    from repro.relational.plan import Predict, SemanticJoin, walk_plan
+
+    def fmt(v, spec="{:.3f}"):
+        return spec.format(v) if v is not None else "n/a"
+
+    lines: List[str] = []
+    for node in walk_plan(plan):
+        if not isinstance(node, (Predict, SemanticJoin)):
+            continue
+        info = node.info
+        key = stats_key(info)
+        rows = float(info.options.get(
+            "est_cross_rows", info.options.get("est_in_rows", 0.0)) or 0.0)
+        est = cost_model.estimate(info, rows)
+        # prefer the selectivity the optimizer actually stamped on the plan
+        # (it may predate observations added by later queries)
+        if "est_selectivity" in info.options:
+            est = dataclasses.replace(
+                est, selectivity=float(info.options["est_selectivity"]),
+                sel_source=str(info.options.get("sel_source",
+                                                est.sel_source)))
+        rec = store.get(key)
+        kind = type(node).__name__
+        instr = key[1] if len(key[1]) <= 48 else key[1][:45] + "..."
+        obs = "none"
+        if rec is not None:
+            obs = (f"sel={fmt(rec.selectivity)} calls={rec.calls} "
+                   f"mean_lat_s={fmt(rec.mean_latency_s, '{:.2f}')} "
+                   f"tokens={fmt(rec.mean_in_tokens, '{:.0f}')}in/"
+                   f"{fmt(rec.mean_out_tokens, '{:.0f}')}out "
+                   f"retry_rate={rec.retry_rate:.2f} "
+                   f"pilot_calls={rec.pilot_calls}")
+        lines.append(
+            f"{kind}[{info.model_name}] '{instr}'\n"
+            f"  est: sel={est.selectivity:.3f} ({est.sel_source}) "
+            f"rows={rows:.0f} calls={est.expected_calls:.0f} "
+            f"makespan_s={est.makespan_s:.2f}\n"
+            f"  obs: {obs}")
+    return "\n".join(lines) if lines else "(no semantic operators)"

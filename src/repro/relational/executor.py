@@ -38,6 +38,10 @@ class ExecStats:
     dispatch_batches: int = 0       # complete_many executor invocations
     mean_batch_occupancy: float = 0.0   # dispatched calls / dispatch batch
     inflight_dedup_hits: int = 0    # submits that joined a pending handle
+    # optimize-time pilot-sampling calls (selectivity calibration); their
+    # tokens/latency are folded into the totals above, the call count is
+    # kept separate so llm_calls stays the pure execution count
+    pilot_calls: int = 0
 
     @property
     def tokens(self) -> int:
@@ -47,10 +51,11 @@ class ExecStats:
 class PlanExecutor:
     def __init__(self, catalog: Catalog,
                  predict_factory: Callable[[PredictInfo], "PredictOperator"],
-                 chunk_size: int = 2048):
+                 chunk_size: int = 2048, stats_store=None):
         self.cat = catalog
         self.predict_factory = predict_factory
         self.chunk_size = chunk_size
+        self.stats_store = stats_store
         self.stats = ExecStats()
 
     # ------------------------------------------------------------------
@@ -73,7 +78,7 @@ class PlanExecutor:
 
     def lower(self, plan: Node) -> PhysicalOp:
         return lower(plan, self.cat, self.predict_factory, self.chunk_size,
-                     absorber=self)
+                     absorber=self, stats_store=self.stats_store)
 
     def physical_plan(self, plan: Node) -> str:
         """Lowered pipeline as text (operators are created lazily, so no

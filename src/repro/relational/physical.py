@@ -198,15 +198,23 @@ class ScanOp(PhysicalOp):
 class FilterOp(PhysicalOp):
     name = "Filter"
 
-    def __init__(self, child: PhysicalOp, predicate, out_schema):
+    def __init__(self, child: PhysicalOp, predicate, out_schema,
+                 stats_probe=None):
         super().__init__(out_schema)
         self.child = child
         self.predicate = predicate
+        # (StatisticsStore, key) when this filter realizes a semantic
+        # select: observed pass rates feed the adaptive cost model
+        self.stats_probe = stats_probe
         self.children = [child]
 
     def _produce(self):
         for c in self.child.chunks():
-            out = c.mask(np.asarray(self.predicate.evaluate(c), bool))
+            mask = np.asarray(self.predicate.evaluate(c), bool)
+            if self.stats_probe is not None and len(c):
+                store, key = self.stats_probe
+                store.record_predicate(key, len(c), int(mask.sum()))
+            out = c.mask(mask)
             if len(out):
                 yield out
 
@@ -583,7 +591,7 @@ class SemanticJoinOp(PhysicalOp):
 
     def __init__(self, left: PhysicalOp, right: PhysicalOp,
                  info: PredictInfo, predict_factory, absorber,
-                 window: int, out_schema):
+                 window: int, out_schema, stats_probe=None):
         super().__init__(out_schema)
         self.left = left
         self.right = right
@@ -591,6 +599,7 @@ class SemanticJoinOp(PhysicalOp):
         self.predict_factory = predict_factory
         self.absorber = absorber
         self.window = max(1, int(window))
+        self.stats_probe = stats_probe
         self.children = [left, right]
 
     def _produce(self):
@@ -607,6 +616,9 @@ class SemanticJoinOp(PhysicalOp):
             out = op.resolve(pc)
             flag = out.column(self.info.out_cols[0])
             kept = out.mask(np.array([bool(x) for x in flag]))
+            if self.stats_probe is not None and len(out):
+                store, key = self.stats_probe
+                store.record_predicate(key, len(out), len(kept))
             # semantic-join output schema = input schemas only (§3.3)
             return kept.select([c for c in kept.column_names
                                 if c not in drop])
@@ -645,17 +657,37 @@ class SemanticJoinOp(PhysicalOp):
 # lowering: logical Node -> PhysicalOp tree
 # ---------------------------------------------------------------------------
 def lower(node: Node, cat, predict_factory: Callable, chunk_size: int,
-          absorber=None) -> PhysicalOp:
+          absorber=None, stats_store=None) -> PhysicalOp:
     """Lowering pass. `absorber` (usually the PlanExecutor) receives every
     PredictOperator's stats exactly once, when its owning op closes.
     Chunk/window sizes are capped by the optimizer's cardinality
-    annotations (est_* in PredictInfo.options) where available."""
+    annotations (est_* in PredictInfo.options) where available.  When a
+    `stats_store` is given, semantic-select filters and semantic joins get
+    probes that record observed predicate selectivity into it."""
+    from repro.core.stats import stats_key
+    from repro.relational.expr import find_predicts
+
+    def _semantic_probe(n: Filter):
+        """(store, key) when this Filter realizes the semantic select of
+        the Predict directly below it."""
+        if stats_store is None or not isinstance(n.child, Predict):
+            return None
+        cols = set()
+        for e in [n.predicate]:
+            cols |= set(e.columns())
+            cols |= {p.resolved_col for p in find_predicts(e)
+                     if p.resolved_col}
+        if cols & set(n.child.info.out_cols):
+            return (stats_store, stats_key(n.child.info))
+        return None
+
     def rec(n: Node) -> PhysicalOp:
         sch = n.schema(cat)
         if isinstance(n, Scan):
             return ScanOp(cat.table(n.table), n.table, chunk_size, sch)
         if isinstance(n, Filter):
-            return FilterOp(rec(n.child), n.predicate, sch)
+            return FilterOp(rec(n.child), n.predicate, sch,
+                            stats_probe=_semantic_probe(n))
         if isinstance(n, Project):
             return ProjectOp(rec(n.child), n.exprs, sch)
         if isinstance(n, Join):
@@ -684,8 +716,11 @@ def lower(node: Node, cat, predict_factory: Callable, chunk_size: int,
                 # never fragment below a useful floor; only shrink the
                 # window when the estimate says the cross product is small
                 window = min(chunk_size, max(256, int(math.ceil(est))))
+            probe = (stats_store, stats_key(n.info)) \
+                if stats_store is not None else None
             return SemanticJoinOp(rec(n.left), rec(n.right), n.info,
-                                  predict_factory, absorber, window, sch)
+                                  predict_factory, absorber, window, sch,
+                                  stats_probe=probe)
         raise TypeError(f"cannot lower {type(n).__name__}")
     return rec(node)
 

@@ -1,0 +1,315 @@
+"""Adaptive statistics + cost-model subsystem tests: store feedback from
+execution, pilot sampling (calibration, caching, amortization guard),
+cost-based select ordering under skewed selectivities (property: the
+cost/(1-sel) rank never increases expected stack cost or, at uniform
+cost, expected call count), the `_filter_used` regression, and the
+EXPLAIN `-- stats --` section."""
+import itertools
+import os
+import sys
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.database import IPDB
+from repro.core.optimizer import Optimizer
+from repro.core.stats import (CostModel, StatisticsStore, expected_stack_cost,
+                              order_rank, stats_key)
+from repro.relational.binder import Binder
+from repro.relational.parser import parse_sql
+from repro.relational.table import Table
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------------------
+# skewed two-predicate workload (shared by several tests)
+# ---------------------------------------------------------------------------
+def skew_oracle(instruction, rows):
+    out = []
+    for r in rows:
+        if "long_txt" in r:
+            i = int(str(r["long_txt"]).split()[-1])
+            out.append({"rare": i % 20 == 0})        # ~5% pass
+        else:
+            i = int(str(r["short_txt"])[1:])
+            out.append({"common": i % 10 != 1})      # ~90% pass
+    return out
+
+
+SKEW_Q = ("SELECT rid FROM R WHERE "
+          "LLM m (PROMPT 'is {rare BOOLEAN} in {{long_txt}}') = TRUE "
+          "AND LLM m (PROMPT 'is {common BOOLEAN} in {{short_txt}}') = TRUE")
+
+
+def skew_db(n=200, pilot=True, **options):
+    db = IPDB()
+    db.register_table("R", Table.from_rows(
+        [{"rid": i, "short_txt": f"s{i}",
+          "long_txt": "lorem ipsum dolor sit amet " * 10 + f"doc {i}"}
+         for i in range(n)]))
+    db.register_oracle("orc", skew_oracle)
+    db.sql("CREATE LLM MODEL m PATH 'oracle:orc' ON PROMPT")
+    db.set_option("use_batching", False)
+    db.set_option("enable_pilot", pilot)
+    for k, v in options.items():
+        db.set_option(k, v)
+    return db
+
+
+# ---------------------------------------------------------------------------
+# statistics store feedback from execution
+# ---------------------------------------------------------------------------
+def test_store_records_selectivity_tokens_latency():
+    db = skew_db(n=30, pilot=False)          # too small for pilots
+    db.sql(SKEW_Q)
+    keys = list(db.stats_store.keys())
+    assert len(keys) == 2
+    common = db.stats_store.get(next(k for k in keys if "common" in k[1]))
+    rare = db.stats_store.get(next(k for k in keys if "rare" in k[1]))
+    # cold store → static size heuristic runs the short predicate first:
+    # it sees all 30 rows, 27 pass (i % 10 != 1)
+    assert common.rows_in == 30
+    assert common.rows_passed == 27
+    assert common.selectivity == pytest.approx(27 / 30)
+    assert common.calls == 30                # batching off → per-row calls
+    # the long predicate sees the 27 survivors; i=0 and i=20 pass
+    assert rare.rows_in == 27
+    assert rare.rows_passed == 2
+    assert rare.calls == 27
+    assert rare.mean_in_tokens > 0
+    assert rare.mean_latency_s > 0
+    assert rare.pilot_calls == 0
+
+
+def test_store_records_semantic_join_selectivity():
+    db = IPDB()
+    db.register_table("A", Table.from_rows(
+        [{"a_txt": f"a{i}"} for i in range(6)]))
+    db.register_table("B", Table.from_rows(
+        [{"b_txt": f"b{i}"} for i in range(5)]))
+    db.register_oracle("orc", lambda ins, rows: [
+        {"match": str(r.get("a_txt", ""))[1:] == str(r.get("b_txt", ""))[1:]}
+        for r in rows])
+    db.sql("CREATE LLM MODEL m PATH 'oracle:orc' ON PROMPT")
+    r = db.sql("SELECT a_txt FROM A JOIN B ON "
+               "LLM m (PROMPT 'is {{a_txt}} {match BOOLEAN} vs {{b_txt}}')")
+    assert len(r.table) == 5                 # diagonal matches
+    (key,) = list(db.stats_store.keys())
+    rec = db.stats_store.get(key)
+    assert rec.rows_in == 30                 # full cross product observed
+    assert rec.rows_passed == 5
+    assert rec.selectivity == pytest.approx(5 / 30)
+
+
+def test_store_records_retries():
+    db = IPDB()
+    db.register_table("T", Table.from_rows(
+        [{"txt": f"t{i}"} for i in range(6)]))
+    db.register_oracle("orc", lambda ins, rows: [{"v": "x"} for r in rows],
+                       malform_rate=1.0)
+    db.sql("CREATE LLM MODEL m PATH 'oracle:orc' ON PROMPT")
+    db.set_option("use_batching", False)
+    db.sql("SELECT LLM m (PROMPT 'get {v VARCHAR} of {{txt}}') AS v FROM T")
+    (key,) = list(db.stats_store.keys())
+    rec = db.stats_store.get(key)
+    assert rec.retries > 0
+    assert rec.retry_rate > 0
+
+
+# ---------------------------------------------------------------------------
+# pilot sampling
+# ---------------------------------------------------------------------------
+def test_pilot_calibrates_reorders_and_reduces_calls():
+    r_static = skew_db(pilot=False).sql(SKEW_Q)
+    db = skew_db(pilot=True)
+    r_adapt = db.sql(SKEW_Q)
+    # results bit-identical
+    assert sorted(r_static.table.column("rid")) == \
+        sorted(r_adapt.table.column("rid"))
+    # 2 predicates × 16-row reservoir, batching off → 32 pilot calls
+    assert r_adapt.stats.pilot_calls == 32
+    assert r_static.stats.pilot_calls == 0
+    # pilot included, the adaptive plan still makes strictly fewer calls
+    # and has strictly lower modeled makespan
+    assert (r_adapt.stats.llm_calls + r_adapt.stats.pilot_calls
+            < r_static.stats.llm_calls)
+    assert r_adapt.stats.sim_latency_s < r_static.stats.sim_latency_s
+    # the store marks the pilot's share of the observations
+    rare_key = next(k for k in db.stats_store.keys() if "rare" in k[1])
+    assert db.stats_store.get(rare_key).pilot_calls == 16
+
+
+def test_pilot_answers_land_in_prompt_cache():
+    db = skew_db(pilot=True)
+    r = db.sql(SKEW_Q)
+    # the execution re-uses the 16 piloted rows of the predicate that runs
+    # first instead of re-dispatching them
+    assert r.stats.prompt_cache_hits >= 16
+
+
+def test_pilot_skipped_when_table_cannot_amortize():
+    db = skew_db(n=40, pilot=True)           # 40 ≤ pilot_min_rows (64)
+    r = db.sql(SKEW_Q)
+    assert r.stats.pilot_calls == 0
+
+
+def test_pilot_not_repeated_once_history_exists():
+    db = skew_db(pilot=True)
+    r1 = db.sql(SKEW_Q)
+    assert r1.stats.pilot_calls == 32
+    r2 = db.sql(SKEW_Q)
+    assert r2.stats.pilot_calls == 0         # store has history now
+    assert r2.stats.llm_calls == 0           # prompt cache has every answer
+    assert sorted(r1.table.column("rid")) == sorted(r2.table.column("rid"))
+
+
+def test_select_vs_join_placement_cost_based_with_batching():
+    """The select-vs-join decision goes through the cost model even with
+    marshaling on (calls quantized by batch_size).  Distinct inputs above
+    the join are never more numerous than on their source side, so the
+    above-join placement (dedup pays only distinct inputs) must be kept,
+    with correct results and one marshaled call over the 5 distinct
+    descs."""
+    pk = [{"pid": i, "desc": f"desc{i}"} for i in range(5)]
+    fk = [{"fid": i, "pid": i % 5, "txt": f"t{i}"} for i in range(12)]
+    db = IPDB()
+    db.register_table("P", Table.from_rows(pk))
+    db.register_table("F", Table.from_rows(fk))
+    db.register_oracle("orc", lambda ins, rows: [
+        {"flag": str(r.get("desc", "")).endswith(("1", "2"))} for r in rows])
+    db.sql("CREATE LLM MODEL m PATH 'oracle:orc' ON PROMPT")
+    r = db.sql("SELECT txt FROM P JOIN F ON pid = pid WHERE "
+               "LLM m (PROMPT 'check {flag BOOLEAN} of {{desc}}') = TRUE")
+    assert r.stats.llm_calls == 1            # one batch, 5 distinct descs
+    assert r.stats.prompt_cache_misses == 5
+    assert sorted(r.table.column("txt")) == \
+        sorted(f"t{i}" for i in range(12) if i % 5 in (1, 2))
+
+
+# ---------------------------------------------------------------------------
+# regression: _filter_used must not depend on enable_merge
+# ---------------------------------------------------------------------------
+def test_filter_used_computed_with_merge_disabled():
+    db = skew_db(n=10, pilot=False)
+    stmt = parse_sql(SKEW_Q)
+    plan = Binder(db.catalog, db.options).bind_select(stmt)
+    opt = Optimizer(db.catalog, {"enable_merge": False})
+    opt.optimize(plan)
+    # before the fix this stayed empty unless enable_merge was on
+    assert opt._filter_used
+    opt2 = Optimizer(db.catalog, {"enable_merge": True})
+    opt2.optimize(Binder(db.catalog, db.options).bind_select(stmt))
+    # same columns modulo the generated fresh-column counters
+    import re
+    norm = lambda s: {re.sub(r"\d+", "#", c) for c in s}
+    assert norm(opt._filter_used) == norm(opt2._filter_used)
+
+
+# ---------------------------------------------------------------------------
+# cost model + ordering properties
+# ---------------------------------------------------------------------------
+def test_cost_model_cold_store_falls_back_to_hints():
+    from repro.relational.plan import PredictInfo
+    cm = CostModel(StatisticsStore(), {"use_batching": False})
+    info = PredictInfo(model_name="m", prompt=None, inputs=["x"],
+                       outputs=[("v", "VARCHAR")],
+                       options={"selectivity_hint": 0.2})
+    sel, src = cm.selectivity(info)
+    assert (sel, src) == (0.2, "hint")
+    est = cm.estimate(info, 100, fallback_in_tokens=80.0)
+    assert est.expected_calls == 100
+    assert est.makespan_s > 0
+    info2 = PredictInfo(model_name="m", prompt=None, inputs=["x"],
+                        outputs=[("v", "VARCHAR")])
+    assert cm.selectivity(info2) == (0.5, "default")
+
+
+def test_cost_model_prefers_observations():
+    from repro.relational.plan import PredictInfo
+    store = StatisticsStore()
+    info = PredictInfo(model_name="m", prompt=None, inputs=["x"],
+                       outputs=[("v", "VARCHAR")],
+                       options={"selectivity_hint": 0.9})
+    store.record_predicate(stats_key(info), 100, 10)
+    store.record_call(stats_key(info), 120, 6, 3.0)
+    cm = CostModel(store, {"use_batching": False, "n_threads": 1})
+    sel, src = cm.selectivity(info)
+    assert (sel, src) == (0.1, "observed")
+    est = cm.estimate(info, 10)
+    assert est.per_call_s == pytest.approx(3.0)
+    assert est.makespan_s == pytest.approx(30.0)   # 10 calls × 3 s, 1 worker
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.floats(0.01, 50.0), st.floats(0.0, 0.99)),
+                min_size=2, max_size=5),
+       st.integers(1, 1000))
+def test_rank_order_never_increases_expected_cost(units, n_rows):
+    """cost/(1-sel)-ascending ordering of commuting semantic selects is
+    optimal: its expected stack cost is the minimum over ALL permutations
+    (hence never worse than the submitted order)."""
+    ranked = sorted(units, key=lambda u: order_rank(u[0], u[1]))
+    best = min(expected_stack_cost(n_rows, list(p))
+               for p in itertools.permutations(units))
+    assert expected_stack_cost(n_rows, ranked) <= best * (1 + 1e-9)
+    assert expected_stack_cost(n_rows, ranked) <= \
+        expected_stack_cost(n_rows, units) * (1 + 1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(0.0, 0.99), min_size=2, max_size=5),
+       st.integers(1, 1000))
+def test_rank_order_never_increases_expected_calls(sels, n_rows):
+    """At uniform per-call cost the rank reduces to ascending selectivity,
+    which minimizes the expected number of predicate calls."""
+    units = [(1.0, s) for s in sels]
+    ranked = sorted(units, key=lambda u: order_rank(u[0], u[1]))
+    assert expected_stack_cost(n_rows, ranked) <= \
+        expected_stack_cost(n_rows, units) * (1 + 1e-9)
+
+
+def test_reordering_keeps_results_bit_identical():
+    """Stats-driven ordering is pure mechanism: rows AND row order of the
+    final result match the unoptimized plan."""
+    base = skew_db(pilot=False,
+                   enable_select_order=False).sql(SKEW_Q)
+    for pilot in (False, True):
+        r = skew_db(pilot=pilot).sql(SKEW_Q)
+        assert r.table.rows() == base.table.rows()
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN -- stats -- section
+# ---------------------------------------------------------------------------
+def test_explain_shows_estimated_vs_observed():
+    db = skew_db(n=30, pilot=False)
+    txt0 = db.explain(SKEW_Q)
+    assert "-- stats --" in txt0
+    assert "(default)" in txt0 or "(hint)" in txt0
+    assert "obs: none" in txt0
+    db.sql(SKEW_Q)
+    txt = db.explain(SKEW_Q)
+    assert "(observed)" in txt
+    assert "obs: sel=" in txt
+    assert "pilot_calls=" in txt
+    # explain never dispatches inference (no pilots, no calls)
+    assert db.last_stats.pilot_calls == 0
+
+
+def test_sql_explain_kwarg_includes_stats_section():
+    db = skew_db(n=30, pilot=False)
+    r = db.sql(SKEW_Q, explain=True)
+    assert "-- stats --" in r.plan
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the adaptive benchmark's win conditions hold in quick mode
+# ---------------------------------------------------------------------------
+def test_bench_adaptive_quick():
+    from benchmarks.bench_adaptive import run as bench_run
+    rows = bench_run(quick=True)
+    names = [r[0] for r in rows]
+    assert names == ["adaptive.static", "adaptive.adaptive",
+                     "adaptive.adaptive_warm"]
