@@ -28,6 +28,7 @@ MODULES = [
     ("pullup_F6", "benchmarks.bench_pullup"),
     ("join_ordering_F7", "benchmarks.bench_join_ordering"),
     ("adaptive_stats", "benchmarks.bench_adaptive"),
+    ("multibackend", "benchmarks.bench_multibackend"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -10,6 +10,7 @@ Executor resolution by model PATH scheme:
     jax:<arch>      → JaxExecutor on an in-process InferenceEngine
                       (smoke-size config of the named architecture)
     *.onnx / tabular:<name> → TabularExecutor via a registered predict fn
+    custom:<name>   → a registered executor factory (tests/benchmarks)
 """
 from __future__ import annotations
 
@@ -47,6 +48,12 @@ class IPDB:
             "batch_size": 16, "n_threads": 16, "use_batching": True,
             "use_dedup": True, "rate_limit_rpm": 0.0,
             "inflight_windows": 1, "max_dispatch_calls": 0,
+            # per-backend dispatch worker pools: 1 = synchronous flush on
+            # the submitting thread (the pre-pool behavior); >1 lets
+            # concurrency-capable backends dispatch on background threads
+            # (clamped to each executor's max_concurrency).  Speculative
+            # flush starts complete max_dispatch_calls-sized slices early.
+            "dispatch_workers": 1, "speculative_flush": True,
             # adaptive statistics: pilot-sample predicates with no history
             # at optimize time (only when the input is ≳4× the sample —
             # override with pilot_min_rows — so the pilot cost amortizes)
@@ -59,6 +66,7 @@ class IPDB:
         self._tabular_fns: Dict[str, Callable] = {}
         self._jax_engines: Dict[str, object] = {}
         self._oracle_kwargs: Dict[str, dict] = {}
+        self._executor_factories: Dict[str, Callable] = {}
         self.last_stats: Optional[ExecStats] = None
         # cross-query prompt cache: shared by every predict operator this
         # database creates (keyed by model + instruction + input tuple)
@@ -72,6 +80,21 @@ class IPDB:
         # dispatched calls feed the statistics store
         self.inference_service = InferenceService(stats_store=self.stats_store)
 
+    # -- lifecycle -------------------------------------------------------
+    def close(self, *, cancel_pending: bool = False) -> None:
+        """Shut the session's inference service down and join its dispatch
+        worker threads (idempotent).  Queued requests are drained first
+        unless `cancel_pending`.  Sessions that never raise
+        `dispatch_workers` above 1 have no threads to join, so existing
+        callers that drop the database without closing leak nothing."""
+        self.inference_service.shutdown(cancel_pending=cancel_pending)
+
+    def __enter__(self) -> "IPDB":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close(cancel_pending=exc_type is not None)
+
     # -- registration ---------------------------------------------------
     def register_table(self, name: str, t: Table) -> None:
         self.catalog.register_table(name, t)
@@ -84,6 +107,12 @@ class IPDB:
 
     def register_tabular(self, name: str, fn: Callable) -> None:
         self._tabular_fns[name] = fn
+
+    def register_executor(self, name: str, factory: Callable) -> None:
+        """Custom executor backends: `factory(entry) -> Predictor` is
+        resolved by model PATH 'custom:<name>'.  Used by tests/benchmarks
+        to plug scripted backends into the full SQL path."""
+        self._executor_factories[name] = factory
 
     def set_option(self, key: str, value) -> None:
         self.options[key] = value
@@ -106,6 +135,11 @@ class IPDB:
                 self._jax_engines[arch] = InferenceEngine(
                     cfg, max_len=int(entry.options.get("max_len", 512)))
             return JaxExecutor(self._jax_engines[arch])
+        if path.startswith("custom:"):
+            name = path.split(":", 1)[1]
+            if name not in self._executor_factories:
+                raise KeyError(f"custom executor {name!r} not registered")
+            return self._executor_factories[name](entry)
         if path.endswith(".onnx") or path.startswith("tabular:"):
             name = path.split(":", 1)[1] if ":" in path else entry.name
             if name not in self._tabular_fns:
@@ -149,11 +183,14 @@ class IPDB:
         o = self.options
         return ("InferenceService inflight_windows={} batch_size={} "
                 "n_threads={} rate_limit_rpm={} max_dispatch_calls={} "
-                "use_dedup={} use_batching={}".format(
+                "use_dedup={} use_batching={} dispatch_workers={} "
+                "speculative_flush={}".format(
                     o.get("inflight_windows", 1), o.get("batch_size", 16),
                     o.get("n_threads", 16), o.get("rate_limit_rpm", 0),
                     o.get("max_dispatch_calls", 0),
-                    o.get("use_dedup", True), o.get("use_batching", True)))
+                    o.get("use_dedup", True), o.get("use_batching", True),
+                    o.get("dispatch_workers", 1),
+                    o.get("speculative_flush", True)))
 
     def _stats_repr(self, plan: Node) -> str:
         return stats_section(plan, self.stats_store,
@@ -188,9 +225,13 @@ class IPDB:
         t0 = time.time()
         plan = Binder(self.catalog, self.options).bind_select(stmt)
         svc = self.inference_service
-        # apply the dispatch cap BEFORE optimizing: pilot sampling inside
-        # optimize() dispatches through the service too
+        # apply the dispatch configuration BEFORE optimizing: pilot
+        # sampling inside optimize() dispatches through the service too
         svc.max_dispatch = int(self.options.get("max_dispatch_calls", 0))
+        svc.speculative = bool(self.options.get("speculative_flush", True))
+        # fresh cost model per query so SET option changes take effect;
+        # drives the service's smallest-makespan-first flush ordering
+        svc.cost_model = CostModel(self.stats_store, self.options)
         pilot = self._make_pilot()
         plan = Optimizer(self.catalog, self.options, stats=self.stats_store,
                          pilot=pilot).optimize(plan)

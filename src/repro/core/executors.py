@@ -42,12 +42,25 @@ class Predictor:
     """Extensible executor interface (paper Table 4)."""
     name = "base"
     options: Dict[str, object] = {}
+    #: hard cap on concurrent `complete_many` dispatches this backend can
+    #: take (1 = not thread-safe, dispatch stays synchronous).  Stateless
+    #: remote-API-style backends raise it; the in-process JAX engine
+    #: cannot (one engine, one compute stream).
+    max_concurrency = 1
 
     def configure(self, options: Dict[str, object]) -> None:
         self.options = dict(options)
 
     def load(self) -> None:
         pass
+
+    def dispatch_workers(self) -> int:
+        """Effective dispatch-worker-pool size for this backend: the
+        session/model `dispatch_workers` option clamped to the backend's
+        declared `max_concurrency`.  1 (the default) keeps the old
+        synchronous flush-on-the-submitting-thread behavior."""
+        want = int(self.options.get("dispatch_workers", 1) or 1)
+        return max(1, min(self.max_concurrency, want))
 
     def complete(self, prompt: str, schema: Sequence[Tuple[str, str]],
                  num_rows: int, *, shared_prefix: str = "",
@@ -84,6 +97,9 @@ class JaxExecutor(Predictor):
     ONE slot-based `ContinuousBatcher.run`, so relational queries get real
     continuous batching instead of sequential generate calls."""
     name = "jax"
+    # one engine, one compute stream: dispatch batches must not overlap —
+    # intra-dispatch parallelism comes from the continuous batcher instead
+    max_concurrency = 1
 
     def __init__(self, engine):
         self.engine = engine
@@ -148,20 +164,29 @@ class OracleExecutor(Predictor):
     """Simulated remote LLM: answers come from a task oracle
     (benchmark-registered `oracle_fn(instruction, rows) -> List[dict]`),
     serialized as the same JSON a real model would emit, with seeded error
-    injection so F1 < 1 and failure-handling paths run."""
+    injection so F1 < 1 and failure-handling paths run.
+
+    Answers, rng draws and modeled latency are keyed by the prompt text
+    alone, so the executor is batch-invariant AND thread-safe: it may take
+    concurrent dispatches (`max_concurrency`).  `sleep_per_call_s` adds a
+    real wall-clock sleep per answered call — an API round-trip stand-in
+    that makes dispatch overlap measurable (`bench_multibackend`) without
+    touching the modeled latency."""
     name = "oracle"
+    max_concurrency = 32
 
     def __init__(self, oracle_fn: Callable[[str, List[dict]], List[dict]],
                  *, error_rate: float = 0.0, malform_rate: float = 0.0,
                  refusal_rate: float = 0.0,
                  latency_model: Callable[[int, int], float] = default_latency_model,
-                 seed: int = 0):
+                 seed: int = 0, sleep_per_call_s: float = 0.0):
         self.oracle_fn = oracle_fn
         self.error_rate = error_rate
         self.malform_rate = malform_rate
         self.refusal_rate = refusal_rate
         self.latency_model = latency_model
         self.seed = seed
+        self.sleep_per_call_s = float(sleep_per_call_s)
 
     def _rng(self, prompt: str) -> np.random.Generator:
         h = hashlib.sha256(f"{self.seed}:{prompt}".encode()).digest()
@@ -181,6 +206,9 @@ class OracleExecutor(Predictor):
                 instruction) -> CallResult:
         """One request; the rng is keyed by the full prompt so answers are
         deterministic regardless of how requests were batched."""
+        wall = self.sleep_per_call_s
+        if wall:
+            time.sleep(wall)
         rng = self._rng(prompt)
         full = shared_prefix + prompt
         in_toks = TOK.count_tokens(full)
@@ -188,7 +216,7 @@ class OracleExecutor(Predictor):
             text = "I cannot help with that request."
             out = TOK.count_tokens(text)
             return CallResult(text, in_toks, out,
-                              self.latency_model(in_toks, out), 0.0)
+                              self.latency_model(in_toks, out), wall)
         answers = self.oracle_fn(instruction, rows or [{}] * num_rows)
         objs = []
         # num_rows == 0 → table generation: the oracle decides cardinality
@@ -208,7 +236,7 @@ class OracleExecutor(Predictor):
             text = "Sure! Here is the result:\n" + text[:max(3, len(text) - 5)]
         out_toks = TOK.count_tokens(text)
         return CallResult(text, in_toks, out_toks,
-                          self.latency_model(in_toks, out_toks), 0.0)
+                          self.latency_model(in_toks, out_toks), wall)
 
     def complete(self, prompt, schema, num_rows, *, shared_prefix="",
                  rows=None, instruction=""):
@@ -238,9 +266,12 @@ class TabularExecutor(Predictor):
     name = "tabular"
 
     def __init__(self, predict_fn: Callable[[List[dict]], List[dict]],
-                 latency_per_row: float = 1e-4):
+                 latency_per_row: float = 1e-4, max_concurrency: int = 1):
         self.predict_fn = predict_fn
         self.latency_per_row = latency_per_row
+        # concurrency is a property of the wrapped callable: pure feature
+        # mappers can take parallel dispatches, stateful ones cannot
+        self.max_concurrency = max(1, int(max_concurrency))
 
     def complete(self, prompt, schema, num_rows, *, shared_prefix="",
                  rows=None, instruction=""):

@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import re
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -54,6 +55,7 @@ DEFAULTS = {
     "retry_limit": 2,
     "chunk_size": 2048,      # vectorized chunk (DuckDB-analog)
     "inflight_windows": 1,   # chunks kept submitted ahead of resolution
+    "dispatch_workers": 1,   # per-backend dispatch pool (1 = synchronous)
     "num_slots": 8,          # continuous-batching decode slots (jax)
 }
 
@@ -148,34 +150,45 @@ class PromptCache:
 
     Eviction is LRU: `get` re-inserts the hit entry at the back of the
     (insertion-ordered) dict, `put` evicts from the front, so hot entries
-    survive churn that would have rotated them out under FIFO."""
+    survive churn that would have rotated them out under FIFO.
+
+    All access is lock-protected: with per-backend dispatch pools, flushes
+    (and the operators that feed the cache from their results) run off the
+    submitting thread, and the touch-on-get delete/re-insert pair is not
+    atomic under the GIL — two unsynchronized readers of one hot key would
+    race the delete."""
 
     def __init__(self, max_entries: int = 200_000):
         self._d: Dict[Tuple, List[Optional[object]]] = {}
+        self._lock = threading.Lock()
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
 
     def get(self, key: Tuple):
-        v = self._d.get(key, _MISS)
-        if v is _MISS:
-            self.misses += 1
-        else:
-            self.hits += 1
-            del self._d[key]               # touch-on-get: move to MRU end
-            self._d[key] = v
-        return v
+        with self._lock:
+            v = self._d.get(key, _MISS)
+            if v is _MISS:
+                self.misses += 1
+            else:
+                self.hits += 1
+                del self._d[key]           # touch-on-get: move to MRU end
+                self._d[key] = v
+            return v
 
     def put(self, key: Tuple, value: List[Optional[object]]) -> None:
-        if key not in self._d and len(self._d) >= self.max_entries:
-            self._d.pop(next(iter(self._d)))          # LRU eviction
-        self._d[key] = value
+        with self._lock:
+            if key not in self._d and len(self._d) >= self.max_entries:
+                self._d.pop(next(iter(self._d)))      # LRU eviction
+            self._d[key] = value
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
     def clear(self) -> None:
-        self._d.clear()
+        with self._lock:
+            self._d.clear()
 
 
 @dataclasses.dataclass
@@ -360,9 +373,20 @@ class PredictOperator:
         return PendingChunk(table, keys, use_dedup, seen, cached, batches,
                             group)
 
+    def kick(self) -> None:
+        """Speculatively start background dispatch of hot service queues
+        (complete `max_dispatch`-sized slices on concurrency-capable
+        backends).  Physical operators call this after each `submit` so
+        dispatch overlaps the production of the next window instead of
+        waiting for the first `resolve`."""
+        self.service.kick()
+
     def resolve(self, pending: PendingChunk) -> Table:
         """Phase 2: force dispatch, parse/retry/fallback every batch, and
-        assemble the output chunk."""
+        assemble the output chunk.  `flush()` schedules concurrency-capable
+        backends on their worker lanes and returns; the per-handle
+        `result()` calls below then block on those futures (synchronous
+        backends still dispatch inline during the flush)."""
         t0 = time.time()
         self.service.flush()
         results: Dict[int, List[Optional[object]]] = {}

@@ -17,21 +17,53 @@ Operators no longer call executors directly.  They build
     over all marshaled prompts, for the oracle/tabular backends one
     vectorized pass — optionally capped at `max_dispatch` calls per batch
     (a simple provider rate limit);
+  * runs dispatch batches on PER-BACKEND WORKER POOLS when the backend
+    declares it can take concurrent dispatches
+    (`Predictor.dispatch_workers()` > 1): queues for different (model,
+    instruction) keys flush on background threads while operators keep
+    submitting, so an oracle/API-style backend's modeled wait overlaps
+    the local JAX engine's real compute.  `dispatch_workers = 1` (the
+    default) is exactly the old synchronous flush;
+  * prioritizes flushes smallest-expected-makespan-first: queues whose
+    expected dispatch makespan (PR 3 CostModel over the statistics store)
+    is lowest are started first, so short batches are never stuck behind
+    a long-running one.  Prioritization never starves a queue — every
+    `flush()` dispatches every queued request;
+  * speculatively flushes hot queues (`kick()`): when a queue has
+    accumulated at least `max_dispatch` requests for a concurrency-capable
+    backend, the complete slices a later `flush()` would dispatch anyway
+    are started early in the background.  Batch composition is invariant
+    (the same prefix slices, in submission order), so accounting does not
+    depend on when the kick happened;
   * owns makespan accounting: per-call modeled latencies are recorded on
     `DispatchGroup`s (one per predict chunk) and reduced with the same
     greedy worker-pool + rpm model that previously lived inside
     `PredictOperator`.
+
+Determinism contract: rows, ExecStats and modeled latencies are
+byte-identical regardless of `dispatch_workers` and of which worker
+finishes first.  This holds because (a) batch composition is a pure
+function of submission order + `max_dispatch`, (b) handles are resolved
+by the operator in submission order, (c) all shared state (queues,
+in-flight map, counters, StatisticsStore, PromptCache) is lock-protected
+and accumulates order-independent sums.  `tests/test_concurrent_dispatch.py`
+pins this with a scripted-latency backend and barrier-forced worst-case
+interleavings.
 
 Synchronous execution is the degenerate case: submit immediately followed
 by flush()+resolve behaves exactly like the old direct `complete()` path.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Sequence, Tuple
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.executors import CallResult, Predictor
+from repro.core.executors import CallResult, Predictor, default_latency_model
 
 
 def makespan(latencies: Sequence[float], workers: int, rpm: float = 0.0
@@ -62,7 +94,9 @@ class DispatchGroup:
     group — including retries and per-tuple fallbacks — records its
     modeled latency here in batch order (the operator appends as it
     consumes results), so the group's greedy makespan matches the old
-    per-chunk `PredictOperator` accounting exactly."""
+    per-chunk `PredictOperator` accounting exactly.  Appends happen on the
+    consuming operator's thread only, never on dispatch workers, which is
+    what keeps the latency order (and the float sums) deterministic."""
     workers: int = 16
     rpm: float = 0.0
     latencies: List[float] = dataclasses.field(default_factory=list)
@@ -105,22 +139,33 @@ class InferenceRequest:
 
 
 class InferenceHandle:
-    """Future for one dispatched (or joined) request."""
-    __slots__ = ("request", "_service", "_result", "refs")
+    """Future for one dispatched (or joined) request.
+
+    Lifecycle: QUEUED (in a service queue) → DISPATCHING (popped for a
+    dispatch batch; `_event` is set iff the batch runs on a worker thread)
+    → DONE (`_result` or `_error` set).  A handle dropped from its queue
+    without dispatch (cancel, shutdown, a failed flush) stays result-less
+    and `result()` raises."""
+    __slots__ = ("request", "_service", "_result", "_error", "_event",
+                 "refs")
 
     def __init__(self, request: InferenceRequest, service: "InferenceService"):
         self.request = request
         self._service = service
         self._result: Optional[CallResult] = None
+        self._error: Optional[BaseException] = None
+        self._event: Optional[threading.Event] = None
         self.refs = 1                  # submitters sharing this handle
 
     @property
     def done(self) -> bool:
-        return self._result is not None
+        return self._result is not None or self._error is not None
 
     def result(self) -> CallResult:
-        if self._result is None:
-            self._service.flush()
+        if not self.done:
+            self._service._force(self)
+        if self._error is not None:
+            raise self._error
         if self._result is None:
             raise RuntimeError("inference request cancelled before dispatch")
         return self._result
@@ -132,6 +177,10 @@ class ServiceStats:
     dispatched_calls: int = 0          # executor calls actually made
     dispatch_batches: int = 0          # complete_many invocations
     inflight_dedup_hits: int = 0       # submits that joined a pending handle
+    # worker-pool accounting (not surfaced in per-query ExecStats: the
+    # sync/async split is an execution detail, batch composition is not)
+    async_batches: int = 0             # batches run on a worker thread
+    speculative_batches: int = 0       # batches started by kick()
 
     @property
     def mean_batch_occupancy(self) -> float:
@@ -140,23 +189,60 @@ class ServiceStats:
         return self.dispatched_calls / self.dispatch_batches
 
 
+class _Lane:
+    """Per-backend dispatch lane: at most `workers` batches of one
+    executor run concurrently; excess batches wait in `pending` and are
+    started FIFO as running ones finish (so per-queue slice order is
+    preserved without blocking a pool thread on a semaphore)."""
+    __slots__ = ("workers", "active", "pending")
+
+    def __init__(self, workers: int):
+        self.workers = max(1, int(workers))
+        self.active = 0
+        self.pending: Deque["_DispatchTask"] = collections.deque()
+
+
+@dataclasses.dataclass
+class _DispatchTask:
+    """One dispatch batch: a slice of one queue, ready to execute (its
+    in-flight keys are already cleared)."""
+    handles: List[InferenceHandle]
+    speculative: bool = False
+
+
 class InferenceService:
     """Batching request broker between predict operators and executors.
 
     `submit()` enqueues; nothing reaches an executor until `flush()`
-    (called implicitly by `InferenceHandle.result()`), so pipelined
-    operators can stack several windows of requests and have them
-    dispatched as one batch per (model, instruction) queue."""
+    (called implicitly by `InferenceHandle.result()`) or a speculative
+    `kick()`, so pipelined operators can stack several windows of requests
+    and have them dispatched as one batch per (model, instruction) queue."""
 
-    def __init__(self, *, max_dispatch: int = 0, stats_store=None):
+    #: upper bound on concurrently running dispatch batches, all backends
+    POOL_THREADS = min(32, 4 * (os.cpu_count() or 4))
+
+    def __init__(self, *, max_dispatch: int = 0, stats_store=None,
+                 cost_model=None, speculative: bool = True):
+        # guards queues, in-flight map, lanes, counters and handle state
+        # transitions; executor calls NEVER run under it
+        self._lock = threading.RLock()
+        self._idle = threading.Condition(self._lock)
         # queues preserve submission order (dict insertion order)
         self._queues: Dict[Tuple, List[InferenceHandle]] = {}
         self._inflight: Dict[Tuple, InferenceHandle] = {}
+        self._lanes: Dict[int, _Lane] = {}
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._outstanding = 0          # scheduled-but-unfinished async tasks
+        self._closed = False
         self.max_dispatch = int(max_dispatch)   # 0 = unbounded batch
+        self.speculative = bool(speculative)
         self.stats = ServiceStats()
         # optional adaptive StatisticsStore: every dispatched call records
         # its tokens + modeled latency under the request's stats_key
         self.stats_store = stats_store
+        # optional PR 3 CostModel: drives smallest-expected-makespan-first
+        # flush prioritization (falls back to a local estimate when absent)
+        self.cost_model = cost_model
 
     # -- submission ------------------------------------------------------
     def open_group(self, workers: int = 16, rpm: float = 0.0) -> DispatchGroup:
@@ -167,88 +253,356 @@ class InferenceService:
         """Enqueue one request.  Returns (handle, owned): owned is False
         when the request joined an identical pending handle (in-flight
         dedup) — the joiner must not account the call's tokens."""
-        self.stats.submitted += 1
-        if request.dedup:
-            h = self._inflight.get(request.dedup_key)
-            if h is not None and not h.done:
-                h.refs += 1
-                self.stats.inflight_dedup_hits += 1
-                return h, False
-        h = InferenceHandle(request, self)
-        self._queues.setdefault(request.queue_key, []).append(h)
-        if request.dedup:
-            self._inflight[request.dedup_key] = h
-        return h, True
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("InferenceService is shut down")
+            self.stats.submitted += 1
+            if request.dedup:
+                h = self._inflight.get(request.dedup_key)
+                # joinable while the entry lives (queued, or speculatively
+                # dispatched and not yet retired by a flush) — even if the
+                # speculative batch already finished, so dedup outcomes
+                # never depend on worker timing.  A failed handle is never
+                # joined (its error must not propagate to new submitters).
+                if h is not None and h._error is None:
+                    h.refs += 1
+                    self.stats.inflight_dedup_hits += 1
+                    return h, False
+            h = InferenceHandle(request, self)
+            self._queues.setdefault(request.queue_key, []).append(h)
+            if request.dedup:
+                self._inflight[request.dedup_key] = h
+            return h, True
 
     def submit(self, requests: Sequence[InferenceRequest]
                ) -> List[InferenceHandle]:
         return [self.submit_one(r)[0] for r in requests]
 
-    # -- dispatch --------------------------------------------------------
-    def flush(self) -> None:
-        """Dispatch every queued request.  Each per-queue slice of at most
-        `max_dispatch` requests is one dispatch batch: one
-        `complete_many` executor call."""
-        for qkey in list(self._queues):
-            handles = self._queues.pop(qkey, [])
-            if not handles:
-                continue
-            step = self.max_dispatch if self.max_dispatch > 0 else len(handles)
-            for s in range(0, len(handles), step):
-                self._dispatch(handles[s:s + step])
+    # -- prioritization --------------------------------------------------
+    def expected_queue_makespan(self, handles: Sequence[InferenceHandle]
+                                ) -> float:
+        """Expected makespan of dispatching `handles` as one queue: the
+        PR 3 CostModel when available (observed mean per-call latency from
+        the statistics store, greedy worker/rpm reduction), else the same
+        computation with the default latency model over a prompt-length
+        token estimate."""
+        req = handles[0].request
+        n = len(handles)
+        in_t = sum(len(h.request.prompt) for h in handles) / (4.0 * n)
+        fallback = default_latency_model(in_t, 4.0 * max(1, len(req.schema)))
+        if self.cost_model is not None:
+            return self.cost_model.queue_makespan(req.stats_key, n, fallback)
+        per = None
+        if self.stats_store is not None and req.stats_key:
+            rec = self.stats_store.get(req.stats_key)
+            if rec is not None and rec.calls:
+                per = rec.mean_latency_s
+        return makespan([fallback if per is None else per] * n, 16)
 
-    def _dispatch(self, handles: List[InferenceHandle]) -> None:
+    def prioritized(self) -> List[Tuple]:
+        """Queue keys in dispatch-priority order: ascending expected
+        makespan, ties broken by submission order (stable), so every
+        flush drains every queue — prioritization reorders, never
+        starves."""
+        with self._lock:
+            return self._priority_order()
+
+    def _priority_order(self) -> List[Tuple]:
+        ranked = []
+        for i, (qkey, handles) in enumerate(self._queues.items()):
+            if handles:
+                ranked.append((self.expected_queue_makespan(handles), i,
+                               qkey))
+        ranked.sort(key=lambda t: (t[0], t[1]))
+        return [qkey for _, _, qkey in ranked]
+
+    # -- dispatch --------------------------------------------------------
+    def _take_slices(self, qkey: Tuple, *, speculative: bool = False
+                     ) -> List[_DispatchTask]:
+        """Pop dispatchable slices of one queue (caller holds the lock).
+        Slice boundaries are a pure function of submission order and
+        `max_dispatch` — identical whether taken by flush() or kick() —
+        so batch composition never depends on dispatch timing.
+
+        In-flight dedup keys are cleared here for flush() takes — flush IS
+        the synchronous dispatch point, after which an identical submit
+        must re-dispatch.  Speculative takes leave their keys joinable
+        (and take only complete slices, a trailing partial stays queued):
+        a duplicate submitted before the next flush joins the handle
+        exactly as it would have joined the still-queued handle under
+        synchronous dispatch, keeping dedup outcomes — hence ExecStats —
+        a pure function of submission order, not of when kick() ran.  The
+        keys are purged at the next flush (`_purge_dispatched`); a batch
+        that failed cannot be joined either way, since `_error` marks its
+        handles done."""
+        handles = self._queues.get(qkey) or []
+        step = self.max_dispatch if self.max_dispatch > 0 else len(handles)
+        if step <= 0:
+            return []
+        n_take = (len(handles) // step) * step if speculative \
+            else len(handles)
+        if n_take == 0:
+            return []
+        take, rest = handles[:n_take], handles[n_take:]
+        if rest:
+            self._queues[qkey] = rest
+        else:
+            self._queues.pop(qkey, None)
+        tasks = []
+        for s in range(0, len(take), step):
+            batch = take[s:s + step]
+            if not speculative:
+                for h in batch:
+                    if h.request.dedup:
+                        self._inflight.pop(h.request.dedup_key, None)
+            tasks.append(_DispatchTask(batch, speculative=speculative))
+        return tasks
+
+    def _purge_dispatched(self) -> None:
+        """Drop in-flight entries whose dispatch already started (left
+        joinable by speculative kicks) — flush is the moment synchronous
+        dispatch would have retired them (caller holds the lock)."""
+        stale = [k for k, h in self._inflight.items()
+                 if h.done or h._event is not None]
+        for k in stale:
+            del self._inflight[k]
+
+    def _workers_for(self, task: _DispatchTask) -> int:
+        return task.handles[0].request.executor.dispatch_workers()
+
+    def flush(self) -> None:
+        """Dispatch every queued request, smallest expected makespan
+        first.  Each per-queue slice of at most `max_dispatch` requests is
+        one dispatch batch: one `complete_many` executor call.  Batches
+        for backends that declare dispatch concurrency are scheduled on
+        their worker lanes (non-blocking) BEFORE the synchronous batches
+        run inline, so background dispatch overlaps the inline work."""
+        inline: List[_DispatchTask] = []
+        background: List[_DispatchTask] = []
+        with self._lock:
+            self._purge_dispatched()
+            for qkey in self._priority_order():
+                for task in self._take_slices(qkey):
+                    if self._workers_for(task) > 1:
+                        background.append(task)
+                    else:
+                        inline.append(task)
+            for task in background:
+                self._schedule(task)
+        # an executor failure marks its own batch's handles (they raise at
+        # result()) but must not strand the other popped batches — dispatch
+        # them all, then re-raise the first failure like the old
+        # queue-at-a-time flush did
+        first_err: Optional[BaseException] = None
+        for task in inline:
+            try:
+                self._dispatch(task.handles)
+            except BaseException as e:
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
+
+    def kick(self) -> None:
+        """Speculative flush of hot queues: start, in the background, the
+        complete `max_dispatch`-sized slices that a later flush() would
+        dispatch anyway, for backends with dispatch concurrency.  Called
+        by operators after submitting a window so dispatch overlaps the
+        production of the next window, before `inflight_windows` fills.
+        A no-op when `max_dispatch` is 0 (an unbounded flush batches the
+        whole queue in one call — dispatching early would change batch
+        composition) or when the backend is synchronous."""
+        if not self.speculative or self.max_dispatch <= 0:
+            return
+        with self._lock:
+            if self._closed:
+                return
+            # no prioritization here: every eligible slice is handed to a
+            # background lane anyway, and kick runs after every submitted
+            # window — keep it O(queues), not O(pending requests)
+            for qkey in list(self._queues):
+                handles = self._queues.get(qkey)
+                if not handles or len(handles) < self.max_dispatch:
+                    continue
+                if handles[0].request.executor.dispatch_workers() <= 1:
+                    continue
+                for task in self._take_slices(qkey, speculative=True):
+                    self._schedule(task)
+
+    # -- worker lanes ----------------------------------------------------
+    def _schedule(self, task: _DispatchTask) -> None:
+        """Hand one batch to its backend's lane (caller holds the lock)."""
+        for h in task.handles:
+            h._event = threading.Event()
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.POOL_THREADS,
+                thread_name_prefix="ipdb-dispatch")
+        ex = task.handles[0].request.executor
+        lane = self._lanes.get(id(ex))
+        if lane is None:
+            lane = self._lanes[id(ex)] = _Lane(self._workers_for(task))
+        else:
+            lane.workers = self._workers_for(task)
+        self._outstanding += 1
+        if task.speculative:
+            self.stats.speculative_batches += 1
+        lane.pending.append(task)
+        self._pump(lane)
+
+    def _pump(self, lane: _Lane) -> None:
+        while lane.active < lane.workers and lane.pending:
+            task = lane.pending.popleft()
+            lane.active += 1
+            self._pool.submit(self._run_task, lane, task)
+
+    def _run_task(self, lane: _Lane, task: _DispatchTask) -> None:
+        try:
+            self._dispatch(task.handles, background=True)
+        except Exception:
+            pass                       # recorded on the handles already
+        finally:
+            with self._lock:
+                lane.active -= 1
+                self._outstanding -= 1
+                if self._pool is not None:
+                    self._pump(lane)
+                if self._outstanding == 0:
+                    self._idle.notify_all()
+
+    def _dispatch(self, handles: List[InferenceHandle],
+                  background: bool = False) -> None:
         reqs = [h.request for h in handles]
-        # clear the in-flight map BEFORE the executor runs: if it raises,
-        # later identical submits must re-dispatch instead of joining a
-        # handle that can never resolve
-        for r in reqs:
-            if r.dedup:
-                self._inflight.pop(r.dedup_key, None)
         executor = reqs[0].executor
-        results = executor.complete_many(
-            [r.prompt for r in reqs], list(reqs[0].schema),
-            [r.num_rows for r in reqs],
-            shared_prefix=reqs[0].shared_prefix,
-            rows_list=[r.rows for r in reqs],
-            instruction=reqs[0].instruction)
-        self.stats.dispatch_batches += 1
-        self.stats.dispatched_calls += len(reqs)
-        for h, res in zip(handles, results):
-            h._result = res
-            if self.stats_store is not None and h.request.stats_key:
-                self.stats_store.record_call(
-                    h.request.stats_key, res.in_tokens, res.out_tokens,
-                    res.sim_latency_s)
+        try:
+            results = executor.complete_many(
+                [r.prompt for r in reqs], list(reqs[0].schema),
+                [r.num_rows for r in reqs],
+                shared_prefix=reqs[0].shared_prefix,
+                rows_list=[r.rows for r in reqs],
+                instruction=reqs[0].instruction)
+        except BaseException as e:
+            with self._lock:
+                for h in handles:
+                    h._error = e
+                    if h._event is not None:
+                        h._event.set()
+            raise
+        with self._lock:
+            self.stats.dispatch_batches += 1
+            self.stats.dispatched_calls += len(reqs)
+            if background:
+                self.stats.async_batches += 1
+            for h, res in zip(handles, results):
+                h._result = res
+                if h._event is not None:
+                    h._event.set()
+        if self.stats_store is not None:
+            for h, res in zip(handles, results):
+                if h.request.stats_key:
+                    self.stats_store.record_call(
+                        h.request.stats_key, res.in_tokens, res.out_tokens,
+                        res.sim_latency_s)
+
+    # -- forcing / lifecycle ---------------------------------------------
+    def _force(self, handle: InferenceHandle) -> None:
+        """Block until `handle` is resolved: flush if it is still queued,
+        then wait for its dispatch batch if one is running."""
+        if not handle.done and handle._event is None:
+            self.flush()               # still queued (or cancelled)
+        ev = handle._event
+        if ev is not None:
+            ev.wait()
 
     def drain(self) -> None:
-        """Flush until no request remains queued."""
-        while any(self._queues.values()):
+        """Flush until no request remains queued, then wait for every
+        background dispatch batch to finish."""
+        while True:
+            with self._lock:
+                if not any(self._queues.values()):
+                    break
             self.flush()
+        self.wait_idle()
+
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        """Wait until no background dispatch is outstanding.  Returns
+        False on timeout."""
+        with self._idle:
+            return self._idle.wait_for(lambda: self._outstanding == 0,
+                                       timeout=timeout)
+
+    def shutdown(self, *, cancel_pending: bool = False) -> None:
+        """Stop the service and join every worker thread (idempotent).
+        With `cancel_pending` still-queued requests are dropped (their
+        handles raise on `result()`); otherwise they are drained first.
+        Either way, batches already running complete — a flush that has
+        started is never interrupted mid-executor-call."""
+        if not cancel_pending:
+            self.drain()
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            for handles in self._queues.values():
+                for h in handles:
+                    if h.request.dedup:
+                        self._inflight.pop(h.request.dedup_key, None)
+            self._queues.clear()
+            # lane backlogs (scheduled but not yet running) will never be
+            # pumped once the pool is gone: resolve their handles to a
+            # shutdown error and release their outstanding counts, or
+            # wait_idle below would block forever
+            err = RuntimeError("InferenceService shut down before dispatch")
+            for lane in self._lanes.values():
+                while lane.pending:
+                    task = lane.pending.popleft()
+                    self._outstanding -= 1
+                    for h in task.handles:
+                        h._error = err
+                        if h._event is not None:
+                            h._event.set()
+            self._lanes.clear()
+            pool, self._pool = self._pool, None
+            if self._outstanding == 0:
+                self._idle.notify_all()
+        if pool is not None:
+            pool.shutdown(wait=True)
+        self.wait_idle()
 
     def cancel(self, handle: InferenceHandle) -> bool:
         """Release one submitter's interest in a still-queued handle
         (pipelined operator closed early, e.g. under an early-exit Limit).
         The request is removed from its queue only when the last
-        submitter cancels — joined submitters keep it alive."""
-        if handle.done:
+        submitter cancels — joined submitters keep it alive.  A handle
+        whose dispatch batch already started (flush or speculative kick)
+        cannot be recalled: cancel returns False and the running batch
+        completes normally."""
+        with self._lock:
+            if handle.done:
+                return False
+            handle.refs -= 1
+            if handle.refs > 0:
+                return False
+            q = self._queues.get(handle.request.queue_key)
+            if q and handle in q:
+                q.remove(handle)
+                if handle.request.dedup:
+                    self._inflight.pop(handle.request.dedup_key, None)
+                return True
             return False
-        handle.refs -= 1
-        if handle.refs > 0:
-            return False
-        q = self._queues.get(handle.request.queue_key)
-        if q and handle in q:
-            q.remove(handle)
-            if handle.request.dedup:
-                self._inflight.pop(handle.request.dedup_key, None)
-            return True
-        return False
 
     @property
     def pending(self) -> int:
-        return sum(len(v) for v in self._queues.values())
+        with self._lock:
+            return sum(len(v) for v in self._queues.values())
+
+    @property
+    def inflight_batches(self) -> int:
+        with self._lock:
+            return self._outstanding
 
     def describe(self) -> str:
         return (f"InferenceService queues={len(self._queues)} "
                 f"pending={self.pending} max_dispatch="
-                f"{self.max_dispatch or 'unbounded'}")
+                f"{self.max_dispatch or 'unbounded'} "
+                f"speculative={self.speculative}")

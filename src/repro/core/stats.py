@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import math
+import threading
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -105,53 +106,72 @@ class PredicateStats:
 class StatisticsStore:
     """Cross-query observation store, owned by the database (a sibling of
     `IPDB.prompt_cache`).  All writers go through the record_* methods so
-    a future persistent backend only has one surface to replace."""
+    a future persistent backend only has one surface to replace.
+
+    Writers are lock-protected: with per-backend dispatch pools the
+    InferenceService records calls from worker threads concurrently with
+    the submitting thread's predicate probes, and the read-modify-write
+    counter updates would otherwise lose increments under the GIL.  All
+    recorded quantities are order-independent sums, so concurrent dispatch
+    cannot change what the store converges to."""
 
     def __init__(self):
         self._d: Dict[Tuple[str, str], PredicateStats] = {}
+        self._lock = threading.Lock()
 
     def entry(self, key: Tuple[str, str]) -> PredicateStats:
-        rec = self._d.get(key)
-        if rec is None:
-            rec = self._d[key] = PredicateStats()
-        return rec
+        with self._lock:
+            rec = self._d.get(key)
+            if rec is None:
+                rec = self._d[key] = PredicateStats()
+            return rec
 
     def get(self, key: Tuple[str, str]) -> Optional[PredicateStats]:
-        return self._d.get(key)
+        with self._lock:
+            return self._d.get(key)
 
     def keys(self) -> Iterable[Tuple[str, str]]:
-        return self._d.keys()
+        with self._lock:
+            return list(self._d.keys())
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
     def clear(self) -> None:
-        self._d.clear()
+        with self._lock:
+            self._d.clear()
 
     # -- writers ---------------------------------------------------------
     def record_call(self, key, in_tokens: int, out_tokens: int,
                     latency_s: float, *, pilot: bool = False) -> None:
         rec = self.entry(key)
-        rec.calls += 1
-        rec.in_tokens += int(in_tokens)
-        rec.out_tokens += int(out_tokens)
-        rec.latency_s += float(latency_s)
-        if pilot:
-            rec.pilot_calls += 1
+        with self._lock:
+            rec.calls += 1
+            rec.in_tokens += int(in_tokens)
+            rec.out_tokens += int(out_tokens)
+            rec.latency_s += float(latency_s)
+            if pilot:
+                rec.pilot_calls += 1
 
     def record_predicate(self, key, rows_in: int, rows_passed: int, *,
                          pilot: bool = False) -> None:
         rec = self.entry(key)
-        rec.rows_in += int(rows_in)
-        rec.rows_passed += int(rows_passed)
-        if pilot:
-            rec.pilot_rows += int(rows_in)
+        with self._lock:
+            rec.rows_in += int(rows_in)
+            rec.rows_passed += int(rows_passed)
+            if pilot:
+                rec.pilot_rows += int(rows_in)
 
     def record_retry(self, key) -> None:
-        self.entry(key).retries += 1
+        rec = self.entry(key)
+        with self._lock:
+            rec.retries += 1
 
     def record_fallback(self, key) -> None:
-        self.entry(key).fallbacks += 1
+        rec = self.entry(key)
+        with self._lock:
+            rec.fallbacks += 1
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +274,25 @@ class CostModel:
             selectivity=sel, sel_source=src, expected_calls=calls,
             per_call_s=lat, in_tokens=calls * in_t, out_tokens=calls * out_t,
             makespan_s=self._makespan(calls, lat))
+
+    def queue_makespan(self, key: Optional[Tuple[str, str]], n_calls: int,
+                       fallback_per_call_s: Optional[float] = None) -> float:
+        """Expected makespan of one InferenceService queue of `n_calls`
+        requests under this model: the store's observed mean per-call
+        latency for `key` when it has history, else the caller's fallback
+        (else the default latency model), reduced through the same greedy
+        worker/rpm schedule as `estimate()`.  Drives the service's
+        smallest-expected-makespan-first flush prioritization."""
+        per = None
+        if key is not None:
+            rec = self.store.get(key)
+            if rec is not None and rec.calls:
+                per = rec.mean_latency_s
+        if per is None:
+            per = (float(fallback_per_call_s)
+                   if fallback_per_call_s is not None
+                   else default_latency_model(64.0, 8.0))
+        return self._makespan(float(n_calls), per)
 
     def rank(self, info, fallback_in_tokens: Optional[float] = None
              ) -> Tuple[float, float, float]:

@@ -539,6 +539,10 @@ class PredictOp(PhysicalOp):
         try:
             for c in self.child.chunks():
                 pending.append(op.submit(c))
+                # speculative background dispatch of hot queues (any
+                # backend's): inference overlaps pulling the next chunk
+                # instead of waiting for the first resolve
+                op.kick()
                 while len(pending) >= inflight:
                     yield op.resolve(pending.pop(0))
             while pending:
@@ -632,6 +636,7 @@ class SemanticJoinOp(PhysicalOp):
                 chunk = _merge_sides(l.take(idx // len(r)),
                                      r.take(idx % len(r)))
                 pending.append(op.submit(chunk))
+                op.kick()              # overlap dispatch with window build
                 while len(pending) >= inflight:
                     kept = emit(pending.pop(0))
                     if len(kept):
