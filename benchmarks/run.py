@@ -2,10 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV and writes a machine-readable
 ``BENCH_results.json`` (name → us_per_call/derived, plus quick-mode flag
-and git SHA) so the perf trajectory can be tracked across PRs.  Set
+and git SHA); every run is ALSO appended as one JSON line (keyed by git
+SHA + timestamp) to ``BENCH_trajectory.jsonl``, so the perf trajectory
+across PRs accumulates instead of being overwritten.  Set
 IPDB_BENCH_QUICK=1 for the reduced-size pass (used by CI/test_output
 runs); the full pass reproduces the paper-scale ratios.  ``--only``
-filters modules by label substring (comma-separated).
+filters modules by label substring (comma-separated); ``--trajectory``
+overrides the jsonl path ('' disables).
 """
 from __future__ import annotations
 
@@ -29,6 +32,7 @@ MODULES = [
     ("join_ordering_F7", "benchmarks.bench_join_ordering"),
     ("adaptive_stats", "benchmarks.bench_adaptive"),
     ("multibackend", "benchmarks.bench_multibackend"),
+    ("prefix_paging", "benchmarks.bench_prefix_paging"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline"),
 ]
@@ -52,6 +56,9 @@ def main(argv=None) -> None:
                     help="comma-separated label substrings to run")
     ap.add_argument("--json", default="BENCH_results.json",
                     help="path for the machine-readable results "
+                         "('' disables)")
+    ap.add_argument("--trajectory", default="BENCH_trajectory.jsonl",
+                    help="append-only per-run results log "
                          "('' disables)")
     args = ap.parse_args(argv)
     quick = os.environ.get("IPDB_BENCH_QUICK", "0") == "1"
@@ -79,12 +86,18 @@ def main(argv=None) -> None:
             failures += 1
             print(f"{label}.ERROR,,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    record = {"quick": quick, "git_sha": _git_sha(),
+              "failures": failures, "results": results}
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"quick": quick, "git_sha": _git_sha(),
-                       "failures": failures, "results": results}, f,
-                      indent=2, sort_keys=True)
+            json.dump(record, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json} ({len(results)} results)", flush=True)
+    if args.trajectory and results:
+        with open(args.trajectory, "a") as f:
+            f.write(json.dumps({"ts": round(time.time(), 1),
+                                "only": args.only, **record},
+                               sort_keys=True) + "\n")
+        print(f"# appended to {args.trajectory}", flush=True)
     if not results:
         sys.exit("benchmarks produced no output")
     if failures:

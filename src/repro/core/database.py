@@ -58,13 +58,19 @@ class IPDB:
             # at optimize time (only when the input is ≳4× the sample —
             # override with pilot_min_rows — so the pilot cost amortizes)
             "enable_pilot": True, "pilot_sample_rows": 16,
+            # jax serving engine KV layout: "dense" keeps per-slot
+            # max_len caches (seed behavior); "paged" switches to the
+            # block-table page pool with zero-copy shared-prefix pages.
+            # kv_pool_pages pins the pool size (None = grow on demand).
+            "kv_layout": "dense", "kv_page_size": 64, "kv_pool_pages": None,
             **DEFAULT_FLAGS,
         }
         if session_options:
             self.options.update(session_options)
         self._oracles: Dict[str, Callable] = {}
         self._tabular_fns: Dict[str, Callable] = {}
-        self._jax_engines: Dict[str, object] = {}
+        # keyed (arch, kv_layout, page_size, pool_pages)
+        self._jax_engines: Dict[tuple, object] = {}
         self._oracle_kwargs: Dict[str, dict] = {}
         self._executor_factories: Dict[str, Callable] = {}
         self.last_stats: Optional[ExecStats] = None
@@ -128,13 +134,30 @@ class IPDB:
                                   **self._oracle_kwargs.get(name, {}))
         if path.startswith("jax:"):
             arch = path.split(":", 1)[1]
-            if arch not in self._jax_engines:
+            layout = str(entry.options.get(
+                "kv_layout", self.options.get("kv_layout", "dense")))
+            pool = entry.options.get(
+                "kv_pool_pages", self.options.get("kv_pool_pages"))
+            pool = None if pool is None else int(pool)
+            page_size = int(entry.options.get(
+                "kv_page_size", self.options.get("kv_page_size", 64)))
+            max_len = int(entry.options.get("max_len", 512))
+            if layout == "dense":
+                # paged-only knobs must not split behaviorally identical
+                # dense engines into separate instances
+                page_size, pool = 64, None
+            # every option that shapes the engine is part of the cache
+            # key — two models must never silently share a mismatched one
+            key = (arch, layout, page_size, pool, max_len)
+            if key not in self._jax_engines:
                 import repro.configs as C
                 from repro.serving.engine import InferenceEngine
                 cfg = C.get_smoke_config(arch).replace(vocab_size=259)
-                self._jax_engines[arch] = InferenceEngine(
-                    cfg, max_len=int(entry.options.get("max_len", 512)))
-            return JaxExecutor(self._jax_engines[arch])
+                self._jax_engines[key] = InferenceEngine(
+                    cfg, max_len=max_len,
+                    kv_layout=layout, page_size=page_size,
+                    page_pool_pages=pool)
+            return JaxExecutor(self._jax_engines[key])
         if path.startswith("custom:"):
             name = path.split(":", 1)[1]
             if name not in self._executor_factories:
@@ -181,7 +204,7 @@ class IPDB:
 
     def _dispatch_repr(self) -> str:
         o = self.options
-        return ("InferenceService inflight_windows={} batch_size={} "
+        line = ("InferenceService inflight_windows={} batch_size={} "
                 "n_threads={} rate_limit_rpm={} max_dispatch_calls={} "
                 "use_dedup={} use_batching={} dispatch_workers={} "
                 "speculative_flush={}".format(
@@ -191,6 +214,23 @@ class IPDB:
                     o.get("use_dedup", True), o.get("use_batching", True),
                     o.get("dispatch_workers", 1),
                     o.get("speculative_flush", True)))
+        # serving-engine KV layout + session-cumulative prefix-reuse
+        # counters, so prefix sharing is visible at the query layer.
+        # Layouts come from the LIVE engines (a model can override the
+        # session default per-entry); the option is the fallback before
+        # any jax engine exists.
+        hits = prefill = decoded = 0
+        for eng in self._jax_engines.values():
+            hits += eng.total.prefix_hits
+            prefill += eng.total.prefill_tokens
+            decoded += eng.total.output_tokens
+        layouts = sorted({k[1] for k in self._jax_engines}) \
+            or [str(o.get("kv_layout", "dense"))]
+        line += ("\nEngine kv_layout={} kv_page_size={} prefix_hits={} "
+                 "prefill_tokens={} decode_tokens={}".format(
+                     ",".join(layouts), o.get("kv_page_size", 64),
+                     hits, prefill, decoded))
+        return line
 
     def _stats_repr(self, plan: Node) -> str:
         return stats_section(plan, self.stats_store,

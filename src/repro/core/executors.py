@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os.path
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -36,6 +37,11 @@ class CallResult:
     out_tokens: int
     sim_latency_s: float          # modeled provider latency (oracle) or wall
     wall_s: float
+    # engine-side accounting (JaxExecutor fills these; remote-API-style
+    # backends have no visible prefill/decode split and leave them 0)
+    prefill_tokens: int = 0       # tokens actually prefit through the model
+    decode_tokens: int = 0        # lock-step decode tokens generated
+    prefix_hits: int = 0          # shared-prefix KV memo hits
 
 
 class Predictor:
@@ -123,13 +129,18 @@ class JaxExecutor(Predictor):
         wall = time.time() - t0
         s = res.stats
         return CallResult(res.texts[0], s.input_tokens, s.output_tokens,
-                          wall, wall)
+                          wall, wall, prefill_tokens=s.prefill_tokens,
+                          decode_tokens=s.output_tokens,
+                          prefix_hits=s.prefix_hits)
 
     def complete_many(self, prompts, schema, num_rows_list, *,
                       shared_prefix="", rows_list=None, instruction=""):
-        # single prompt, or a shared instruction prefix (which the
-        # batcher's per-slot prefill cannot KV-share): generate path
-        if len(prompts) == 1 or shared_prefix:
+        paged = getattr(self.engine, "kv_layout", "dense") == "paged"
+        # single prompt, or a shared instruction prefix under the DENSE
+        # layout (whose per-slot prefill cannot KV-share): generate path.
+        # The paged batcher CAN share a prefix — its pages are referenced,
+        # not copied, by every slot's block table — so it keeps batching.
+        if len(prompts) == 1 or (shared_prefix and not paged):
             return super().complete_many(
                 prompts, schema, num_rows_list, shared_prefix=shared_prefix,
                 rows_list=rows_list, instruction=instruction)
@@ -137,20 +148,46 @@ class JaxExecutor(Predictor):
         if self._batcher is None:
             self._batcher = ContinuousBatcher(
                 self.engine, num_slots=int(self.options.get("num_slots", 8)))
+        # `prompts` are suffixes EXCLUDING any caller-provided shared_prefix
+        # (the InferenceService contract) — only a prefix WE carve out of
+        # the prompts below may be stripped from them
+        prefix = shared_prefix
+        run_prompts = list(prompts)
+        if paged and not prefix:
+            # marshaled prompts all start with the same instruction text:
+            # carve the common prefix out and prefill it once into shared
+            # pages (only worth it at >= one full page).  Keep every
+            # suffix non-empty — a prompt that EQUALS the common prefix
+            # must still contribute its last token to the prefill
+            common = os.path.commonprefix(run_prompts)
+            common = common[:max(0, min(len(p) for p in run_prompts) - 1)]
+            if TOK.count_tokens(common) + 1 >= self.engine.page_size:
+                prefix = common
+                run_prompts = [p[len(prefix):] for p in prompts]
         max_new = min(int(self.options.get("max_tokens", 4096)),
                       self.engine.max_len)
         reqs = [Request(prompt=p, grammar=self._grammar(schema, nr),
                         max_new_tokens=max_new)
-                for p, nr in zip(prompts, num_rows_list)]
+                for p, nr in zip(run_prompts, num_rows_list)]
+        bs = self._batcher.stats
+        before = (bs.prefill_tokens, bs.output_tokens, bs.prefix_hits)
         t0 = time.time()
         done = self._batcher.run(
-            reqs, temperature=float(self.options.get("temperature", 0.7)))
+            reqs, temperature=float(self.options.get("temperature", 0.7)),
+            shared_prefix=prefix if paged else "")
         per = (time.time() - t0) / max(1, len(done))
         out = []
-        for r in done:
+        for orig, r in zip(prompts, done):
             text = r.text or ""
-            out.append(CallResult(text, TOK.count_tokens(r.prompt),
+            out.append(CallResult(text,
+                                  TOK.count_tokens(shared_prefix + orig),
                                   TOK.count_tokens(text), per, per))
+        # whole-run engine accounting rides on the first result (per-row
+        # attribution of lock-step prefill/decode work is arbitrary; the
+        # operator only ever sums these)
+        out[0].prefill_tokens = bs.prefill_tokens - before[0]
+        out[0].decode_tokens = bs.output_tokens - before[1]
+        out[0].prefix_hits = bs.prefix_hits - before[2]
         return out
 
 

@@ -76,6 +76,10 @@ class PredictStats:
     pc_hits: int = 0               # cross-query prompt-cache hits
     pc_misses: int = 0             # lookups that had to dispatch a call
     inflight_hits: int = 0         # submits that joined a pending handle
+    # engine-side serving accounting (jax backend; zero for API backends)
+    prefill_tokens: int = 0        # tokens prefit through the model
+    decode_tokens: int = 0         # lock-step decode tokens generated
+    prefix_hits: int = 0           # shared-prefix KV memo hits
 
     def add(self, o: "PredictStats") -> None:
         for f in dataclasses.fields(self):
@@ -523,6 +527,9 @@ class PredictOperator:
         self.stats.calls += 1
         self.stats.in_tokens += res.in_tokens
         self.stats.out_tokens += res.out_tokens
+        self.stats.prefill_tokens += res.prefill_tokens
+        self.stats.decode_tokens += res.decode_tokens
+        self.stats.prefix_hits += res.prefix_hits
 
     def _note_retry(self) -> None:
         self.stats.retries += 1

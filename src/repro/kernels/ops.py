@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.constrained_logits import constrained_sample_pallas
-from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention import (decode_attention_paged_pallas,
+                                            decode_attention_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gmm import gmm_pallas
 from repro.kernels.selective_scan import selective_scan_pallas
@@ -104,6 +105,50 @@ def decode_attention(q, k_cache, v_cache, slot_positions, q_position, *,
     qf = qf * jnp.asarray((Dp / D) ** 0.5, qf.dtype)
     o = decode_attention_pallas(qf, kf, vf, sp, qpos, block_l=block_l,
                                 interpret=interpret)
+    return o.reshape(B, KV, G, Dp).reshape(B, H, Dp)[..., :D]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_paged(q, k_pool, v_pool, block_tables, q_position, *,
+                           interpret: Optional[bool] = None):
+    """Paged decode attention with natural shapes: q (B, H, D); pools
+    (P, ps, KV, D); block_tables (B, NB) int32 page ids (-1 = invalid);
+    q_position (B,). Returns (B, H, D).
+
+    GQA folding duplicates only the tiny block table — the pool itself is
+    reshaped per kv-head slice, not per batch row.  Inactive/invalid table
+    entries are rewritten to the row's last active page so the kernel
+    pipeline revisits an already-resident page (no extra DMA) while the
+    predicated body skips the compute.  (On TPU one would keep the pool
+    pre-transposed/padded to this folded layout; the per-call transpose
+    here mirrors what the dense wrapper already pays.)"""
+    interpret = use_interpret() if interpret is None else interpret
+    B, H, D = q.shape
+    P, ps, KV, _ = k_pool.shape
+    NB = block_tables.shape[1]
+    G = H // KV
+    Dp = _round_up(D, 128)
+
+    qf = _pad_axis(q, 2, Dp).reshape(B, KV, G, Dp).reshape(B * KV, G, Dp)
+    kf = _pad_axis(k_pool, 3, Dp).transpose(2, 0, 1, 3).reshape(KV * P, ps, Dp)
+    vf = _pad_axis(v_pool, 3, Dp).transpose(2, 0, 1, 3).reshape(KV * P, ps, Dp)
+
+    qpos = q_position.astype(jnp.int32)
+    nact = jnp.clip(jnp.clip(qpos, 0, None) // ps + 1, 1, NB)       # (B,)
+    last = jnp.take_along_axis(block_tables, (nact - 1)[:, None], axis=1)
+    idxs = jnp.arange(NB, dtype=jnp.int32)[None, :]
+    bt = jnp.where((idxs < nact[:, None]) & (block_tables >= 0),
+                   block_tables, last)
+    bt = jnp.clip(bt, 0, P - 1)
+    btf = (bt[:, None, :] +
+           jnp.arange(KV, dtype=jnp.int32)[None, :, None] * P
+           ).reshape(B * KV, NB)
+    nactf = jnp.repeat(nact, KV)
+    qposf = jnp.repeat(qpos, KV)
+
+    qf = qf * jnp.asarray((Dp / D) ** 0.5, qf.dtype)
+    o = decode_attention_paged_pallas(qf, kf, vf, btf, nactf, qposf,
+                                      interpret=interpret)
     return o.reshape(B, KV, G, Dp).reshape(B, H, Dp)[..., :D]
 
 

@@ -45,6 +45,26 @@ def decode_attention_ref(q, k_cache, v_cache, slot_positions, q_position):
                       v_cache.astype(jnp.float32)).astype(q.dtype)
 
 
+def decode_attention_paged_ref(q, k_pool, v_pool, block_tables, num_active,
+                               q_position):
+    """q (BK, G, D); pools (P, ps, D); block_tables (BK, NB) page ids;
+    num_active (BK,) active blocks; q_position (BK, 1). Gathers the pages
+    into a dense view, then reuses the dense oracle with the paged-layout
+    position invariant (logical slot index == absolute position)."""
+    BK = q.shape[0]
+    P, ps, _ = k_pool.shape
+    NB = block_tables.shape[1]
+    safe = jnp.clip(block_tables, 0, P - 1)
+    k = k_pool[safe].reshape(BK, NB * ps, -1)
+    v = v_pool[safe].reshape(BK, NB * ps, -1)
+    pos = jnp.broadcast_to(jnp.arange(NB * ps, dtype=jnp.int32)[None],
+                           (BK, NB * ps))
+    active = jnp.repeat(
+        jnp.arange(NB)[None, :] < num_active[:, None], ps, axis=1)
+    pos = jnp.where(active, pos, -1)
+    return decode_attention_ref(q, k, v, pos, q_position)
+
+
 def gmm_ref(x, w, group_sizes):
     """x (T, M) rows sorted by expert; w (E, M, N); group_sizes (E,).
     Dense oracle via per-row expert ids."""

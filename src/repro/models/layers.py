@@ -321,6 +321,76 @@ def decode_attention(q, k_cache, v_cache, cache_positions, q_position):
     return o.reshape(B, H, D).astype(q.dtype)
 
 
+# -- paged decode attention (block-table addressed page pool) -------------------
+def decode_attention_paged(q, k_pool, v_pool, block_tables, q_position):
+    """q (B, H, D); pools (P, ps, KV, D) — a GLOBAL page pool shared by all
+    sequences (and, for a shared instruction prefix, by all batch rows);
+    block_tables (B, NB) int32 page ids (-1 = invalid entry); q_position
+    (B,). Returns (B, H, D).
+
+    Paged-layout invariant: logical slot index == absolute token position,
+    so slot validity is just `index <= q_position` plus table-entry
+    validity. Pure jnp (gathers the pages); the zero-gather Pallas twin
+    lives in kernels/decode_attention.
+    """
+    B, H, D = q.shape
+    P, ps, KV, _ = k_pool.shape
+    NB = block_tables.shape[1]
+    safe = jnp.clip(block_tables, 0, P - 1)
+    k = k_pool[safe].reshape(B, NB * ps, KV, D)
+    v = v_pool[safe].reshape(B, NB * ps, KV, D)
+    pos = jnp.broadcast_to(jnp.arange(NB * ps, dtype=jnp.int32)[None],
+                           (B, NB * ps))
+    valid = jnp.repeat(block_tables >= 0, ps, axis=1)
+    pos = jnp.where(valid, pos, -1)
+    return decode_attention(q, k, v, pos, q_position)
+
+
+def prefix_suffix_attention(q, k_prefix, v_prefix, k_suf, v_suf,
+                            positions, prefix_len):
+    """Shared-prefix prefill attention WITHOUT replicating the prefix KV.
+
+    q (B, S, H, D) suffix queries; k_prefix/v_prefix (Lp, KV, D) — ONE copy
+    of the shared prefix KV, broadcast across the batch inside the einsum
+    (no (B, Lp) materialization); k_suf/v_suf (B, S, KV, D) the suffix's
+    own KV; positions (B, S) absolute (-1 = pad); prefix_len scalar number
+    of valid prefix tokens (<= Lp). Prefix tokens are fully visible to
+    every suffix query (their positions precede all suffix positions);
+    the suffix part is causal. The two score blocks are merged with a
+    joint streamed-softmax so the result equals one softmax over
+    [prefix ++ suffix].
+    """
+    B, S, H, D = q.shape
+    KV = k_suf.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, D) / math.sqrt(D)
+
+    ss = jnp.einsum("bskgd,btkd->bkgst", qf, k_suf.astype(jnp.float32))
+    ok_s = (positions[:, None, :] >= 0) & \
+           (positions[:, None, :] <= positions[:, :, None])       # (B, S, T)
+    ss = jnp.where(ok_s[:, None, None], ss, NEG_INF)
+
+    Lp = k_prefix.shape[0]
+    if Lp:
+        sp = jnp.einsum("bskgd,lkd->bkgsl", qf, k_prefix.astype(jnp.float32))
+        ok_p = (jnp.arange(Lp)[None, None, :] < prefix_len) & \
+               (positions[:, :, None] >= 0)                       # (B, S, Lp)
+        sp = jnp.where(ok_p[:, None, None], sp, NEG_INF)
+        m = jnp.maximum(sp.max(axis=-1), ss.max(axis=-1))         # (B,KV,G,S)
+        pp = jnp.exp(sp - m[..., None])
+        psx = jnp.exp(ss - m[..., None])
+        denom = jnp.maximum(pp.sum(-1) + psx.sum(-1), 1e-30)
+        o = jnp.einsum("bkgsl,lkd->bskgd", pp, v_prefix.astype(jnp.float32)) \
+            + jnp.einsum("bkgst,btkd->bskgd", psx, v_suf.astype(jnp.float32))
+    else:
+        m = ss.max(axis=-1)
+        psx = jnp.exp(ss - m[..., None])
+        denom = jnp.maximum(psx.sum(-1), 1e-30)
+        o = jnp.einsum("bkgst,btkd->bskgd", psx, v_suf.astype(jnp.float32))
+    o = o / denom.transpose(0, 3, 1, 2)[..., None]
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
 # -- MLPs ------------------------------------------------------------------------
 def swiglu_mlp(x, w_gate, w_up, w_down):
     h = jax.nn.silu(x @ w_gate) * (x @ w_up)

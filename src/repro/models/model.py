@@ -186,6 +186,33 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
     return out
 
 
+def paged_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
+                      batch: int) -> Dict[str, Any]:
+    """Paged KV layout: one GLOBAL pool of fixed-size pages per layer
+    instead of per-row dense caches.  Sequences address the pool through a
+    per-row block table (passed separately, host-managed), so a shared
+    instruction prefix is one set of pages referenced by every row.  SSM
+    conv/h state stays per-row dense — it is O(1) in sequence length."""
+    ln, cd = cfg.num_layers, _dt(cfg.compute_dtype)
+    out: Dict[str, Any] = {"idx": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.has_attention:
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        out["k"] = jax.ShapeDtypeStruct((ln, num_pages, page_size, kv, hd), cd)
+        out["v"] = jax.ShapeDtypeStruct((ln, num_pages, page_size, kv, hd), cd)
+    if cfg.has_ssm:
+        out["conv"] = jax.ShapeDtypeStruct(
+            (ln, batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.float32)
+        out["h"] = jax.ShapeDtypeStruct(
+            (ln, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    return out
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     batch: int = 0) -> Dict[str, Any]:
+    specs = paged_cache_specs(cfg, num_pages, page_size, batch)
+    return {k: jnp.zeros(s.shape, s.dtype) for k, s in specs.items()}
+
+
 # ================================ blocks ======================================
 def _norm_p(lp: Dict[str, jax.Array], prefix: str) -> Optional[dict]:
     scale = lp.get(f"{prefix}.scale")
@@ -197,10 +224,15 @@ def _norm_p(lp: Dict[str, jax.Array], prefix: str) -> Optional[dict]:
 
 def _attention(cfg: ModelConfig, x, lp, positions, mode, ck, cv, slot_pos, idx,
                attn_fn=None, decode_attn_fn=None, extend_offset: int = 0,
-               row_idx=None, kv_cs=MOE.Identity):
+               row_idx=None, kv_cs=MOE.Identity, paged=None):
     """x (B,S,M). Returns (out (B,S,M), new_ck, new_cv).
     extend_offset > 0 (prefill mode): attend over [cache[:offset] ++ new] and
-    write the new K/V at slot offset — chunked prefill / shared-prefix reuse."""
+    write the new K/V at slot offset — chunked prefill / shared-prefix reuse.
+    paged (dict or None): block-table addressed page-pool layout — ck/cv are
+    then (P, ps, KV, D) pools, paged["block_tables"] is (B, NB) page ids
+    (-1 = invalid; invalid/out-of-range writes are dropped), and prefill may
+    carry paged["prefix_table"]/["prefix_len"] pointing at shared prefix
+    pages that are read in place, never replicated per row."""
     B, S, m = x.shape
     h, kv, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
     cd = _dt(cfg.compute_dtype)
@@ -218,7 +250,50 @@ def _attention(cfg: ModelConfig, x, lp, positions, mode, ck, cv, slot_pos, idx,
         v = kv_cs(v)
 
     new_ck, new_cv = ck, cv
-    if mode == "decode":
+    if paged is not None and mode == "decode":
+        bt = paged["block_tables"]
+        P_, ps_ = ck.shape[0], ck.shape[1]
+        NB_ = bt.shape[1]
+        pos = positions[:, 0]                                     # (B,)
+        blk = jnp.clip(pos, 0, None) // ps_
+        entry = jnp.take_along_axis(
+            bt, jnp.clip(blk, 0, NB_ - 1)[:, None], axis=1)[:, 0]
+        # beyond table capacity (pos >= NB_·ps_, i.e. past max_len) writes
+        # are dropped — the sequence keeps decoding against a frozen cache.
+        # The dense layout ring-wraps instead; both are out of contract
+        # past max_len and the layouts' byte-equality only holds within it.
+        ok = (pos >= 0) & (blk < NB_) & (entry >= 0)
+        page = jnp.where(ok, entry, P_)        # P_ is out of bounds → drop
+        off = jnp.clip(pos, 0, None) % ps_
+        new_ck = ck.at[page, off].set(k[:, 0].astype(ck.dtype), mode="drop")
+        new_cv = cv.at[page, off].set(v[:, 0].astype(cv.dtype), mode="drop")
+        fn = decode_attn_fn or L.decode_attention_paged
+        o = fn(q[:, 0], new_ck, new_cv, bt, pos)[:, None]
+    elif paged is not None:
+        # paged prefill: suffix flash vs its own KV merged with a broadcast
+        # (never replicated) read of the shared prefix pages; new KV is
+        # committed straight into the rows' pages
+        assert mode == "prefill" and not cfg.sliding_window
+        bt = paged["block_tables"]
+        pt = paged.get("prefix_table")
+        plen = paged.get("prefix_len", jnp.int32(0))
+        P_, ps_ = ck.shape[0], ck.shape[1]
+        NB_ = bt.shape[1]
+        if pt is not None and pt.shape[0]:
+            kp = ck[jnp.clip(pt, 0, P_ - 1)].reshape((-1,) + ck.shape[2:])
+            vp = cv[jnp.clip(pt, 0, P_ - 1)].reshape((-1,) + cv.shape[2:])
+        else:
+            kp = ck[:0].reshape((0,) + ck.shape[2:])
+            vp = cv[:0].reshape((0,) + cv.shape[2:])
+        o = L.prefix_suffix_attention(q, kp, vp, k, v, positions, plen)
+        blk = jnp.clip(positions, 0, None) // ps_                 # (B, S)
+        entry = jnp.take_along_axis(bt, jnp.clip(blk, 0, NB_ - 1), axis=1)
+        ok = (positions >= 0) & (blk < NB_) & (entry >= 0)
+        page = jnp.where(ok, entry, P_)
+        off = jnp.clip(positions, 0, None) % ps_
+        new_ck = ck.at[page, off].set(k.astype(ck.dtype), mode="drop")
+        new_cv = cv.at[page, off].set(v.astype(cv.dtype), mode="drop")
+    elif mode == "decode":
         lc = ck.shape[1]
         if row_idx is not None:
             # per-row write slots (continuous batching: ragged fill levels)
@@ -273,7 +348,7 @@ def _attention(cfg: ModelConfig, x, lp, positions, mode, ck, cv, slot_pos, idx,
 def _block(cfg: ModelConfig, x, lp, positions, mode, cache_l, *,
            num_groups=1, dispatch_cs=MOE.Identity, combine_cs=MOE.Identity,
            attn_fn=None, decode_attn_fn=None, scan_fn=None,
-           extend_offset: int = 0, kv_cs=MOE.Identity):
+           extend_offset: int = 0, kv_cs=MOE.Identity, paged=None):
     """One residual block. cache_l: per-layer cache slice dict (or {})."""
     B, S, m = x.shape
     new_cache = dict(cache_l)
@@ -285,7 +360,7 @@ def _block(cfg: ModelConfig, x, lp, positions, mode, cache_l, *,
         a, nk, nv = _attention(cfg, xin, lp, positions, mode,
                                cache_l.get("k"), cache_l.get("v"), slot_pos, idx,
                                attn_fn, decode_attn_fn, extend_offset,
-                               cache_l.get("row_idx"), kv_cs)
+                               cache_l.get("row_idx"), kv_cs, paged)
         state = None
         if mode != "train":
             state = M.SSMState(conv=cache_l["conv"], h=cache_l["h"])
@@ -322,7 +397,7 @@ def _block(cfg: ModelConfig, x, lp, positions, mode, cache_l, *,
     a, nk, nv = _attention(cfg, xin, lp, positions, mode,
                            cache_l.get("k"), cache_l.get("v"), slot_pos, idx,
                            attn_fn, decode_attn_fn, extend_offset,
-                           cache_l.get("row_idx"), kv_cs)
+                           cache_l.get("row_idx"), kv_cs, paged)
     x = x + a
     if mode != "train" and cfg.has_attention:
         new_cache.update(k=nk, v=nv)
@@ -392,6 +467,12 @@ def forward(cfg: ModelConfig, params: PyTree, batch: Dict[str, jax.Array],
     idx = shared_cache.get("idx", jnp.int32(0))
     slot_pos = shared_cache.get("slot_pos")
     row_idx = shared_cache.get("row_idx")
+    paged = None
+    if "block_tables" in shared_cache:
+        paged = {"block_tables": shared_cache["block_tables"]}
+        if "prefix_table" in shared_cache:
+            paged["prefix_table"] = shared_cache["prefix_table"]
+            paged["prefix_len"] = shared_cache.get("prefix_len", jnp.int32(0))
 
     x = residual_cs(x)
 
@@ -407,7 +488,7 @@ def forward(cfg: ModelConfig, params: PyTree, batch: Dict[str, jax.Array],
                        num_groups=num_groups, dispatch_cs=dispatch_cs,
                        combine_cs=combine_cs, attn_fn=attn_fn,
                        decode_attn_fn=decode_attn_fn, scan_fn=scan_fn,
-                       extend_offset=extend_offset, kv_cs=kv_cs)
+                       extend_offset=extend_offset, kv_cs=kv_cs, paged=paged)
         y = residual_cs(y)
         nc = {k: nc[k] for k in _LAYER_CACHE_KEYS if k in nc}
         return y, nc

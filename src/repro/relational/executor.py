@@ -42,6 +42,12 @@ class ExecStats:
     # tokens/latency are folded into the totals above, the call count is
     # kept separate so llm_calls stays the pure execution count
     pilot_calls: int = 0
+    # engine-side serving accounting (jax backend): how much prefill vs
+    # decode work the query actually pushed through the model, and how
+    # often the shared-prefix KV memo answered instead of a prefill
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    prefix_hits: int = 0
 
     @property
     def tokens(self) -> int:
@@ -100,3 +106,6 @@ class PlanExecutor:
         self.stats.rows_predicted += s.rows_in
         self.stats.prompt_cache_hits += s.pc_hits
         self.stats.prompt_cache_misses += s.pc_misses
+        self.stats.prefill_tokens += s.prefill_tokens
+        self.stats.decode_tokens += s.decode_tokens
+        self.stats.prefix_hits += s.prefix_hits

@@ -7,9 +7,16 @@ Features mapped from the paper's optimizations:
   * grammar-constrained decoding (per-step masks from serving.grammar,
     applied by the fused constrained_logits kernel or the jnp ref)
   * shared-prefix KV reuse: the instruction prefix of a marshaled prompt is
-    prefilled once, broadcast across the row batch, and extended — the
-    compute-side realization of multi-row prompt marshaling (§6.2)
-  * continuous batching (scheduler.py) with per-row cache indices
+    prefilled once and extended — the compute-side realization of multi-row
+    prompt marshaling (§6.2).  Two layouts:
+      - kv_layout="dense": per-row contiguous caches; the memoized prefix
+        KV is broadcast (physically replicated) across the row batch
+      - kv_layout="paged": one global pool of fixed-size KV pages plus
+        per-row block tables; shared FULL prefix pages are referenced —
+        not copied — by every row (O(1) memory, zero per-row device
+        copies) and decode attention walks only the pages a row occupies
+  * continuous batching (scheduler.py) with per-row cache indices (dense)
+    or page-table slot lifecycle (paged)
 """
 from __future__ import annotations
 
@@ -45,16 +52,84 @@ class GenStats:
     decode_steps: int = 0
     wall_s: float = 0.0
     prefix_hits: int = 0
+    kv_bytes: int = 0              # peak KV-cache footprint (high-water)
 
     def add(self, other: "GenStats") -> None:
         for f in dataclasses.fields(self):
-            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+            if f.name == "kv_bytes":       # high-water mark, not a flow
+                self.kv_bytes = max(self.kv_bytes, other.kv_bytes)
+            else:
+                setattr(self, f.name,
+                        getattr(self, f.name) + getattr(other, f.name))
 
 
 @dataclasses.dataclass
 class GenResult:
     texts: List[str]
     stats: GenStats
+
+
+class PageAllocator:
+    """Host-side bookkeeping for the global KV page pool: a free list plus
+    per-page refcounts (shared instruction-prefix pages are referenced by
+    the prefix memo AND by every running batch that uses them) and a
+    high-water mark — the `peak cache bytes` number the benchmarks report."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, -1, -1))       # pop() → 0 first
+        self._ref = np.zeros(num_pages, np.int64)
+        self.peak_in_use = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, free {len(self._free)}"
+                f" of {self.num_pages}")
+        ids = [self._free.pop() for _ in range(n)]
+        for p in ids:
+            self._ref[p] = 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return ids
+
+    def retain(self, ids: Sequence[int]) -> None:
+        for p in ids:
+            self._ref[p] += 1
+
+    def refs(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def release(self, ids: Sequence[int]) -> None:
+        for p in ids:
+            self._ref[p] -= 1
+            assert self._ref[p] >= 0, f"double free of page {p}"
+            if self._ref[p] == 0:
+                self._free.append(p)
+
+    def grow(self, extra: int) -> None:
+        start = self.num_pages
+        self.num_pages += extra
+        self._ref = np.concatenate([self._ref, np.zeros(extra, np.int64)])
+        self._free.extend(range(self.num_pages - 1, start - 1, -1))
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    """Memoized shared-prefix KV: the host copy (layout-independent source
+    of truth; decode steps donate their buffers and must never alias it)
+    plus, in paged mode, the pool pages it is currently resident in."""
+    host_kv: dict
+    off: int                        # bucketed prefix length (dense slots)
+    real_len: int                   # true token count
+    pages: Optional[List[int]] = None
 
 
 class InferenceEngine:
@@ -64,17 +139,39 @@ class InferenceEngine:
 
     def __init__(self, cfg: ModelConfig, params=None, *,
                  seed: int = 0, max_len: int = 1024,
-                 use_pallas_sampler: bool = False):
+                 use_pallas_sampler: bool = False,
+                 kv_layout: str = "dense", page_size: int = 64,
+                 page_pool_pages: Optional[int] = None,
+                 prefix_memo_entries: int = 16,
+                 use_pallas_decode: bool = False):
         assert cfg.supports_decode, f"{cfg.name} cannot generate"
+        assert kv_layout in ("dense", "paged"), kv_layout
+        if kv_layout == "paged":
+            assert cfg.has_attention, "paged KV layout needs attention"
         self.cfg = cfg
         self.max_len = max_len
         self.params = params if params is not None else \
             MDL.init_params(cfg, jax.random.PRNGKey(seed))
         self.use_pallas_sampler = use_pallas_sampler
-        self._prefill_cache: Dict[Tuple[int, int, int], object] = {}
-        self._decode_fns: Dict[int, object] = {}
-        self._prefix_kv: Dict[Tuple[str, int], Tuple[dict, int]] = {}
+        self.use_pallas_decode = use_pallas_decode
+        self.kv_layout = kv_layout
+        self.page_size = int(page_size)
+        self.page_pool_pages = page_pool_pages
+        self.prefix_memo_entries = int(prefix_memo_entries)
+        #: per-row block-table width: max_len tokens worth of pages
+        self.num_table_blocks = max(1, -(-max_len // self.page_size))
+        self._prefill_cache: Dict[Tuple, object] = {}
+        self._decode_fns: Dict[object, object] = {}
+        #: LRU memo of shared-prefix KV (touch-on-get, capped — mirrors
+        #: PromptCache semantics); evicting a paged-resident entry releases
+        #: its pool pages
+        self._prefix_kv: Dict[Tuple[str, int], _PrefixEntry] = {}
         self._rng = np.random.default_rng(seed)
+        #: session-cumulative stats (EXPLAIN `-- dispatch --` surfacing)
+        self.total = GenStats()
+        # paged-layout state (lazy): device page pool + host allocator
+        self._pool: Optional[Dict[str, jax.Array]] = None
+        self._alloc: Optional[PageAllocator] = None
 
     # ----------------------------- compiled steps -----------------------------
     def _prefill_fn(self, batch: int, length: int, offset: int):
@@ -95,15 +192,43 @@ class InferenceEngine:
     def _decode_fn(self):
         if "fn" not in self._decode_fns:
             cfg = self.cfg
+            datt = None
+            if self.use_pallas_decode:
+                from repro.kernels import ops as KOPS
+                datt = KOPS.decode_attention
 
             def fn(params, tokens, positions, cache):
                 logits, cache = MDL.forward(
                     cfg, params, {"tokens": tokens, "positions": positions},
-                    mode="decode", cache=cache, remat=False)
+                    mode="decode", cache=cache, remat=False,
+                    decode_attn_fn=datt)
                 return logits[:, 0], cache
 
             self._decode_fns["fn"] = jax.jit(fn, donate_argnums=(3,))
         return self._decode_fns["fn"]
+
+    def _decode_fn_paged(self, num_blocks: int):
+        """Decode step against the page pool; jit-cached per block-table
+        width, so the attention grid covers only the blocks the batch
+        actually occupies (the caller buckets `num_blocks`)."""
+        key = ("paged", num_blocks)
+        if key not in self._decode_fns:
+            cfg = self.cfg
+            datt = None
+            if self.use_pallas_decode:
+                from repro.kernels import ops as KOPS
+                datt = KOPS.decode_attention_paged
+
+            def fn(params, tokens, positions, cache, bt):
+                cache = dict(cache, block_tables=bt)
+                logits, cache = MDL.forward(
+                    cfg, params, {"tokens": tokens, "positions": positions},
+                    mode="decode", cache=cache, remat=False,
+                    decode_attn_fn=datt)
+                return logits[:, 0], cache
+
+            self._decode_fns[key] = jax.jit(fn, donate_argnums=(3,))
+        return self._decode_fns[key]
 
     # ------------------------------- prefill ----------------------------------
     def _prefill(self, token_lists: List[List[int]], *, offset: int = 0,
@@ -135,21 +260,115 @@ class InferenceEngine:
         lens = np.array([pos_offset + len(t) for t in token_lists], np.int32)
         return np.asarray(logits, np.float32), cache, lens, B * L
 
-    # ----------------------------- shared prefix ------------------------------
-    def prefix_cache_for(self, prefix_text: str, batch: int):
-        """Prefill the shared instruction prefix ONCE (batch=1), memoize,
-        broadcast to the row batch. Returns (cache, offset, stats_delta)."""
+    # ------------------------------ page pool ---------------------------------
+    def _page_bytes(self) -> int:
+        cfg = self.cfg
+        itemsize = 2 if cfg.compute_dtype in ("bfloat16", "float16") else 4
+        return (2 * cfg.num_layers * self.page_size * cfg.num_kv_heads
+                * cfg.head_dim * itemsize)
+
+    def _dense_cache_bytes(self, cache: dict) -> int:
+        return int(cache["k"].size * cache["k"].dtype.itemsize
+                   + cache["v"].size * cache["v"].dtype.itemsize) \
+            if "k" in cache else 0
+
+    def _ensure_pool(self, need_pages: int) -> bool:
+        """Make `need_pages` allocatable: create the pool lazily, then free
+        pages by dropping LRU prefix residencies, then grow the device
+        arrays — unless the operator pinned `page_pool_pages`, in which
+        case the pool is a hard memory bound and False is returned when the
+        demand cannot fit (callers wait for slot frees or raise)."""
+        if self._pool is None:
+            n = self.page_pool_pages or \
+                max(2 * need_pages, 2 * self.num_table_blocks)
+            n = max(n, 1)
+            if self.page_pool_pages is None:
+                n = max(n, need_pages)
+            full = MDL.init_paged_cache(self.cfg, n, self.page_size)
+            self._pool = {"k": full["k"], "v": full["v"]}
+            self._alloc = PageAllocator(n)
+            return self._alloc.free_pages >= need_pages
+        a = self._alloc
+        if a.free_pages >= need_pages:
+            return True
+        for key in list(self._prefix_kv):      # LRU-first residency drop
+            if a.free_pages >= need_pages:
+                break
+            ent = self._prefix_kv[key]
+            # skip entries whose pages an in-flight run still retains:
+            # releasing the memo's reference would free nothing while
+            # permanently discarding the zero-copy residency
+            if ent.pages is not None and \
+                    all(a.refs(p) == 1 for p in ent.pages):
+                a.release(ent.pages)
+                ent.pages = None
+        if a.free_pages >= need_pages:
+            return True
+        if self.page_pool_pages is not None:
+            return False                       # pinned pool: hard bound
+        extra = max(need_pages - a.free_pages, a.num_pages // 2)
+        for kk in ("k", "v"):
+            pool = self._pool[kk]
+            pad = jnp.zeros(pool.shape[:1] + (extra,) + pool.shape[2:],
+                            pool.dtype)
+            self._pool[kk] = jnp.concatenate([pool, pad], axis=1)
+        a.grow(extra)
+        return True
+
+    def _ssm_state(self, batch: int) -> Dict[str, jax.Array]:
+        """Per-row SSM state for paged runs (shapes owned by
+        model.paged_cache_specs — single source of truth)."""
+        if not self.cfg.has_ssm:
+            return {}
+        specs = MDL.paged_cache_specs(self.cfg, 1, self.page_size, batch)
+        return {k: jnp.zeros(specs[k].shape, specs[k].dtype)
+                for k in ("conv", "h")}
+
+    # ----------------------------- prefix memo --------------------------------
+    def _prefix_memo_get(self, key) -> Optional[_PrefixEntry]:
+        ent = self._prefix_kv.get(key)
+        if ent is not None:
+            del self._prefix_kv[key]           # touch-on-get: move to MRU end
+            self._prefix_kv[key] = ent
+        return ent
+
+    def _prefix_memo_put(self, key, ent: _PrefixEntry) -> None:
+        while len(self._prefix_kv) >= max(1, self.prefix_memo_entries):
+            k0 = next(iter(self._prefix_kv))
+            old = self._prefix_kv.pop(k0)
+            if old.pages is not None and self._alloc is not None:
+                self._alloc.release(old.pages)   # refcounted: in-flight
+                old.pages = None                 # users keep them alive
+        self._prefix_kv[key] = ent
+
+    def _prefix_entry_for(self, prefix_text: str, stats: GenStats
+                          ) -> _PrefixEntry:
+        """Memo lookup; on miss the prefix is prefilled ONCE (batch=1) and
+        its KV kept on host."""
         ids = TOK.encode(prefix_text)
         key = (prefix_text, self.max_len)
-        hit = key in self._prefix_kv
-        if not hit:
-            _, cache1, lens, pre_toks = self._prefill([ids])
-            # keep the memoized prefix KV on host: downstream decode steps
-            # donate their cache buffers, which must never alias this copy
-            self._prefix_kv[key] = (
-                jax.tree.map(lambda x: np.asarray(x), cache1),
-                int(np.asarray(cache1["idx"])), len(ids))
-        cache1, off, real_len = self._prefix_kv[key]
+        ent = self._prefix_memo_get(key)
+        if ent is None:
+            _, cache1, _, _ = self._prefill([ids])
+            ent = _PrefixEntry(
+                host_kv=jax.tree.map(lambda x: np.asarray(x), cache1),
+                off=int(np.asarray(cache1["idx"])), real_len=len(ids))
+            self._prefix_memo_put(key, ent)
+            stats.prefill_tokens += len(ids)
+        else:
+            stats.prefix_hits += 1
+        return ent
+
+    # ----------------------------- shared prefix ------------------------------
+    def prefix_cache_for(self, prefix_text: str, batch: int):
+        """Dense layout: prefill the shared instruction prefix ONCE
+        (batch=1), memoize, broadcast to the row batch. Returns
+        (cache, offset, real_len, new_prefill_tokens, hit)."""
+        ids = TOK.encode(prefix_text)
+        probe = GenStats()
+        ent = self._prefix_entry_for(prefix_text, probe)
+        hit = probe.prefix_hits > 0
+        cache1, off, real_len = ent.host_kv, ent.off, ent.real_len
 
         def rep(x):
             x = jnp.asarray(x)
@@ -162,7 +381,145 @@ class InferenceEngine:
                  for k, v in cache1.items()}
         return cache, off, real_len, (0 if hit else len(ids)), hit
 
+    def prefix_pages_for(self, prefix_text: str, stats: GenStats
+                         ) -> Tuple[List[int], int, List[int]]:
+        """Paged layout: resolve the shared prefix to pool pages.  Only
+        FULL pages are shared (every referencing row reads them in place);
+        the sub-page tail rides with each row's suffix so rows never write
+        into a shared page.  Returns (page_ids, shared_token_count,
+        tail_token_ids)."""
+        ids = TOK.encode(prefix_text)
+        ps = self.page_size
+        n_share = (len(ids) // ps) * ps
+        if n_share == 0:
+            return [], 0, ids
+        npre = n_share // ps
+        peek = self._prefix_kv.get((prefix_text, self.max_len))
+        if (peek is None or peek.pages is None) and not self._ensure_pool(npre):
+            # pinned pool too small to ever share: bail BEFORE the memo so
+            # no batch=1 prefill is wasted and no phantom prefix_hits are
+            # counted for reuse that cannot physically happen
+            return [], 0, ids
+        ent = self._prefix_entry_for(prefix_text, stats)
+        if ent.pages is None:
+            pages = self._alloc.alloc(npre)
+            cfg = self.cfg
+            k1 = jnp.asarray(ent.host_kv["k"])        # (ln, 1, lc, kv, hd)
+            v1 = jnp.asarray(ent.host_kv["v"])
+            # prefill wrote the bucketed sequence at slots 0..off-1 with the
+            # left padding first: token t lives at slot (off - len) + t
+            pad = ent.off - len(ids)
+            shp = (cfg.num_layers, npre, ps, cfg.num_kv_heads, cfg.head_dim)
+            ksrc = k1[:, 0, pad:pad + n_share].reshape(shp)
+            vsrc = v1[:, 0, pad:pad + n_share].reshape(shp)
+            pg = jnp.asarray(pages, jnp.int32)
+            self._pool["k"] = self._pool["k"].at[:, pg].set(
+                ksrc.astype(self._pool["k"].dtype))
+            self._pool["v"] = self._pool["v"].at[:, pg].set(
+                vsrc.astype(self._pool["v"].dtype))
+            ent.pages = pages
+        return list(ent.pages), n_share, ids[n_share:]
+
+    # ----------------------------- paged prefill ------------------------------
+    def paged_prefill(self, token_lists: List[List[int]], table_rows,
+                      prefix_pages: Sequence[int], prefix_len: int, *,
+                      extra: Optional[dict] = None):
+        """Prefill suffixes straight into their block-table pages, reading
+        shared prefix pages in place (no per-row replication).  table_rows:
+        np.ndarray (B, NB) page ids.  Returns (logits, lens, prefill_token
+        count, extra_out) — extra carries per-row SSM state for hybrid
+        models."""
+        B = len(token_lists)
+        L = _bucket(max(len(t) for t in token_lists))
+        toks = np.full((B, L), TOK.PAD_ID, np.int32)
+        pos = np.zeros((B, L), np.int32)
+        for i, t in enumerate(token_lists):
+            pad = L - len(t)
+            toks[i, pad:] = t
+            pos[i] = np.arange(L) - pad + prefix_len
+            pos[i, :pad] = -1
+        npre = len(prefix_pages)
+        cache = {"idx": jnp.int32(0),
+                 "k": self._pool["k"], "v": self._pool["v"]}
+        if extra:
+            cache.update(extra)
+        key = ("paged", B, L, table_rows.shape[1], npre)
+        if key not in self._prefill_cache:
+            cfg = self.cfg
+
+            # block table / prefix table ride OUTSIDE the donated cache:
+            # they are rebuilt host-side every call, donation buys nothing
+            def fn(params, tokens, positions, cache, bt, ptab, plen):
+                cache = dict(cache, block_tables=bt, prefix_table=ptab,
+                             prefix_len=plen)
+                logits, cache = MDL.forward(
+                    cfg, params, {"tokens": tokens, "positions": positions},
+                    mode="prefill", cache=cache, remat=False, last_only=True)
+                return logits[:, -1], cache
+
+            self._prefill_cache[key] = jax.jit(fn, donate_argnums=(3,))
+        logits, out = self._prefill_cache[key](
+            self.params, jnp.asarray(toks), jnp.asarray(pos), cache,
+            jnp.asarray(np.ascontiguousarray(table_rows)),
+            jnp.asarray(np.asarray(prefix_pages, np.int32).reshape(npre)),
+            jnp.int32(prefix_len))
+        self._pool["k"], self._pool["v"] = out["k"], out["v"]
+        extra_out = {k: out[k] for k in ("conv", "h") if k in out}
+        lens = np.array([prefix_len + len(t) for t in token_lists], np.int32)
+        return np.asarray(logits, np.float32), lens, B * L, extra_out
+
+    def paged_decode(self, toks, positions, table, num_blocks: int, *,
+                     extra: Optional[dict] = None):
+        """One lock-step decode tick against the page pool.  `table` is the
+        host block table (B, NB_full); only its first `num_blocks` columns
+        (the batch's actual fill, bucketed by the caller) reach the device,
+        so attention work scales with occupancy, not max_len."""
+        cache = {"idx": jnp.int32(0),
+                 "k": self._pool["k"], "v": self._pool["v"]}
+        if extra:
+            cache.update(extra)
+        dec = self._decode_fn_paged(num_blocks)
+        lg, out = dec(self.params, jnp.asarray(toks[:, None]),
+                      jnp.asarray(positions[:, None]), cache,
+                      jnp.asarray(np.ascontiguousarray(table[:, :num_blocks])))
+        self._pool["k"], self._pool["v"] = out["k"], out["v"]
+        extra_out = {k: out[k] for k in ("conv", "h") if k in out}
+        return np.asarray(lg, np.float32), extra_out
+
+    def active_blocks(self, fills) -> int:
+        """Bucketed block count covering the given fill levels (pow-2 so
+        decode-step jit caches stay few)."""
+        need = max(1, max((int(f) // self.page_size) + 1 for f in fills))
+        nb = 1
+        while nb < need:
+            nb *= 2
+        return min(nb, self.num_table_blocks)
+
     # ------------------------------- generate ---------------------------------
+    @staticmethod
+    def _consume_tokens(toks, gs, states, out_tokens, done,
+                        stats: GenStats) -> None:
+        """Apply one sampled token per not-yet-done row: grammar advance,
+        EOS, completion + per-tick stats. Shared by the dense and paged
+        generate loops so their semantics cannot drift."""
+        for i in range(len(done)):
+            if done[i]:
+                continue
+            t = int(toks[i])
+            if gs[i] is not None:
+                states[i] = gs[i].advance(states[i], t)
+                if t != TOK.EOS_ID:
+                    out_tokens[i].append(t)
+                if gs[i].done(states[i]):
+                    done[i] = True
+            else:
+                if t == TOK.EOS_ID:
+                    done[i] = True
+                else:
+                    out_tokens[i].append(t)
+        stats.decode_steps += 1
+        stats.output_tokens += int((~done).sum())
+
     def generate(self, prompts: Sequence[str], *,
                  grammar: Optional[JsonGrammar] = None,
                  grammars: Optional[List[JsonGrammar]] = None,
@@ -176,6 +533,13 @@ class InferenceEngine:
         B = len(prompts)
         gs = grammars or ([grammar] * B if grammar else [None] * B)
         states = [g.init_state() if g else None for g in gs]
+
+        if self.kv_layout == "paged":
+            texts = self._generate_paged(prompts, gs, states, max_new_tokens,
+                                         temperature, shared_prefix, stats)
+            stats.wall_s = time.time() - t0
+            self.total.add(stats)
+            return GenResult(texts, stats)
 
         offset = 0
         pos_offset = None
@@ -193,6 +557,7 @@ class InferenceEngine:
             token_lists, offset=offset, pos_offset=pos_offset,
             cache=cache, row_idx_mode=True)
         stats.prefill_tokens += pre
+        stats.kv_bytes = self._dense_cache_bytes(cache)
 
         decode = self._decode_fn()
         out_tokens: List[List[int]] = [[] for _ in range(B)]
@@ -201,23 +566,7 @@ class InferenceEngine:
 
         for step in range(max_new_tokens):
             toks = self._sample(logits, gs, states, temperature)
-            for i in range(B):
-                if done[i]:
-                    continue
-                t = int(toks[i])
-                if gs[i] is not None:
-                    states[i] = gs[i].advance(states[i], t)
-                    if t != TOK.EOS_ID:
-                        out_tokens[i].append(t)
-                    if gs[i].done(states[i]):
-                        done[i] = True
-                else:
-                    if t == TOK.EOS_ID:
-                        done[i] = True
-                    else:
-                        out_tokens[i].append(t)
-            stats.decode_steps += 1
-            stats.output_tokens += int((~done).sum())
+            self._consume_tokens(toks, gs, states, out_tokens, done, stats)
             if done.all():
                 break
             lg, cache = decode(self.params, jnp.asarray(toks[:, None]),
@@ -226,7 +575,79 @@ class InferenceEngine:
             positions += 1
 
         stats.wall_s = time.time() - t0
+        self.total.add(stats)
         return GenResult([TOK.decode(t) for t in out_tokens], stats)
+
+    def _generate_paged(self, prompts, gs, states, max_new_tokens,
+                        temperature, shared_prefix, stats: GenStats
+                        ) -> List[str]:
+        """Paged-layout generate: per-row block tables over the global page
+        pool; a shared prefix contributes the SAME page ids to every row's
+        table (zero-copy sharing)."""
+        B = len(prompts)
+        ps = self.page_size
+        NBf = self.num_table_blocks
+        cap = NBf * ps
+
+        pages_pre: List[int] = []
+        n_share = 0
+        tail: List[int] = []
+        if shared_prefix:
+            pages_pre, n_share, tail = self.prefix_pages_for(
+                shared_prefix, stats)
+            stats.input_tokens += TOK.count_tokens(shared_prefix)
+        token_lists = [tail + TOK.encode(p, bos=not shared_prefix)
+                       for p in prompts]
+        stats.input_tokens += sum(len(t) - len(tail) for t in token_lists)
+
+        npre = len(pages_pre)
+        if self._alloc is not None and pages_pre:
+            self._alloc.retain(pages_pre)      # survive memo eviction mid-call
+        table = np.full((B, NBf), -1, np.int32)
+        if npre:
+            table[:, :npre] = pages_pre        # shared: same ids every row
+        owned: List[List[int]] = []
+        try:
+            need_each = [max(0, -(-min(n_share + len(t) + max_new_tokens,
+                                       cap) // ps) - npre)
+                         for t in token_lists]
+            if not self._ensure_pool(sum(need_each)):
+                raise RuntimeError(
+                    f"page pool ({self.page_pool_pages} pages) too small "
+                    f"for batch of {B} rows")
+            for i, need in enumerate(need_each):
+                ids = self._alloc.alloc(need)
+                owned.append(ids)
+                table[i, npre:npre + need] = ids
+
+            extra = self._ssm_state(B)
+            logits, lens, pre, extra = self.paged_prefill(
+                token_lists, table, pages_pre, n_share, extra=extra)
+            stats.prefill_tokens += pre
+
+            out_tokens: List[List[int]] = [[] for _ in range(B)]
+            done = np.zeros(B, bool)
+            positions = lens.copy()
+
+            for step in range(max_new_tokens):
+                toks = self._sample(logits, gs, states, temperature)
+                self._consume_tokens(toks, gs, states, out_tokens, done,
+                                     stats)
+                if done.all():
+                    break
+                nb = self.active_blocks(positions[~done])
+                logits, extra = self.paged_decode(toks, positions, table, nb,
+                                                  extra=extra)
+                positions += 1
+        finally:
+            # errors must not leak refcounts: a pinned pool would shrink
+            # permanently
+            for ids in owned:
+                self._alloc.release(ids)
+            if pages_pre:
+                self._alloc.release(pages_pre)
+        stats.kv_bytes = self._alloc.peak_in_use * self._page_bytes()
+        return [TOK.decode(t) for t in out_tokens]
 
     # ------------------------------- sampling ---------------------------------
     def _sample(self, logits: np.ndarray, gs, states, temperature: float

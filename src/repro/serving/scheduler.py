@@ -7,6 +7,16 @@ This is the serving analog of the paper's §6.3 parallel-call executor: the
 "worker pool" is the decode batch, and slot eviction doubles as straggler
 mitigation (a request exceeding its token budget is cut off and re-queued
 or failed without stalling the batch).
+
+Two KV layouts (engine.kv_layout):
+  * dense — each slot owns a contiguous max_len cache row; memory is
+    num_slots × max_len regardless of fill, and a shared instruction
+    prefix is prefilled again for every slot.
+  * paged — slots own block tables over the engine's global page pool;
+    refill allocates pages, completion/eviction frees them (so num_slots
+    is bounded by page-pool memory, not dense worst-case rows), and a
+    shared prefix is prefilled ONCE into pool pages that every slot's
+    table references zero-copy.
 """
 from __future__ import annotations
 
@@ -41,19 +51,70 @@ class ContinuousBatcher:
         self.num_slots = num_slots
         self.stats = GenStats()
 
-    def run(self, requests: Sequence[Request], *, temperature: float = 0.0
-            ) -> List[Request]:
-        """Process all requests to completion; returns them (order kept)."""
+    def run(self, requests: Sequence[Request], *, temperature: float = 0.0,
+            shared_prefix: str = "") -> List[Request]:
+        """Process all requests to completion; returns them (order kept).
+        `shared_prefix` is prepended to every prompt: the dense layout
+        prefills it per slot (replication — the old behavior), the paged
+        layout prefills it once into shared pool pages."""
+        st = GenStats(calls=1)
         t0 = time.time()
-        eng = self.engine
         reqs = list(requests)
         for i, r in enumerate(reqs):
             r.rid = i
+        if self.engine.kv_layout == "paged":
+            self._run_paged(reqs, temperature, shared_prefix, st)
+        else:
+            self._run_dense(reqs, temperature, shared_prefix, st)
+        st.wall_s = time.time() - t0
+        self.stats.add(st)
+        self.engine.total.add(st)
+        return reqs
+
+    # ---------------------------- per-tick advance ----------------------------
+    @staticmethod
+    def _advance_live(live, active, states, outs, budgets, toks, st, logits,
+                      on_finish) -> int:
+        """Consume one sampled token per live slot: grammar advance, EOS,
+        token-budget eviction, completion. Shared by both layouts so their
+        tick semantics (and the pinned byte-equality) cannot drift.
+        Returns the number of slots that finished."""
+        done = 0
+        for b in live:
+            r = active[b]
+            t = int(toks[b])
+            if r.grammar is not None:
+                states[b] = r.grammar.advance(states[b], t)
+                if t != TOK.EOS_ID:
+                    outs[b].append(t)
+                finished = r.grammar.done(states[b])
+            else:
+                finished = t == TOK.EOS_ID
+                if not finished:
+                    outs[b].append(t)
+            budgets[b] -= 1
+            st.output_tokens += 1
+            if budgets[b] <= 0 and not finished:
+                r.error = "token budget exceeded (slot evicted)"
+                finished = True
+            if finished:
+                r.text = TOK.decode(outs[b])
+                active[b] = None
+                done += 1
+                logits[b] = NEG_INF
+                on_finish(b)
+        return done
+
+    # ------------------------------- dense ------------------------------------
+    def _run_dense(self, reqs: List[Request], temperature: float,
+                   shared_prefix: str, st: GenStats) -> None:
+        eng = self.engine
         queue = list(reqs)
         B = self.num_slots
 
         cache = MDL.init_cache(eng.cfg, B, eng.max_len)
         cache["row_idx"] = jnp.zeros((B,), jnp.int32)
+        st.kv_bytes = eng._dense_cache_bytes(cache)
         active: List[Optional[Request]] = [None] * B
         states = [None] * B
         outs: List[List[int]] = [[] for _ in range(B)]
@@ -62,10 +123,10 @@ class ContinuousBatcher:
         logits = np.full((B, eng.cfg.padded_vocab), NEG_INF, np.float32)
 
         def fill_slot(b: int, req: Request, cache):
-            ids = TOK.encode(req.prompt)
+            ids = TOK.encode(shared_prefix + req.prompt)
             lg, c1, lens, pre = eng._prefill([ids], row_idx_mode=True)
-            self.stats.prefill_tokens += pre
-            self.stats.input_tokens += len(ids)
+            st.prefill_tokens += pre
+            st.input_tokens += len(ids)
             # splice sequence 0 of c1 into slot b of the live cache
             new = dict(cache)
             for k, v in c1.items():
@@ -99,31 +160,14 @@ class ContinuousBatcher:
 
             gs = [active[b].grammar if active[b] else None for b in range(B)]
             toks = eng._sample(logits, gs, states, temperature)
-            for b in live:
-                r = active[b]
-                t = int(toks[b])
-                if r.grammar is not None:
-                    states[b] = r.grammar.advance(states[b], t)
-                    if t != TOK.EOS_ID:
-                        outs[b].append(t)
-                    finished = r.grammar.done(states[b])
-                else:
-                    finished = t == TOK.EOS_ID
-                    if not finished:
-                        outs[b].append(t)
-                budgets[b] -= 1
-                self.stats.output_tokens += 1
-                if budgets[b] <= 0 and not finished:
-                    r.error = "token budget exceeded (slot evicted)"
-                    finished = True
-                if finished:
-                    r.text = TOK.decode(outs[b])
-                    active[b] = None
-                    done_count += 1
-                    logits[b] = NEG_INF
+            done_count += self._advance_live(live, active, states, outs,
+                                             budgets, toks, st, logits,
+                                             lambda b: None)
 
             if done_count >= len(reqs):
                 break
+            if not any(a is not None for a in active):
+                continue           # all finished this tick; refill next
             lg, cache = decode(eng.params, jnp.asarray(toks[:, None]),
                                jnp.asarray(positions[:, None]), cache)
             lgn = np.asarray(lg, np.float32)
@@ -133,7 +177,125 @@ class ContinuousBatcher:
             positions += 1
             ticks += 1
 
-        self.stats.decode_steps += ticks
-        self.stats.calls += 1
-        self.stats.wall_s += time.time() - t0
-        return reqs
+        st.decode_steps += ticks
+
+    # ------------------------------- paged ------------------------------------
+    def _run_paged(self, reqs: List[Request], temperature: float,
+                   shared_prefix: str, st: GenStats) -> None:
+        eng = self.engine
+        ps = eng.page_size
+        NBf = eng.num_table_blocks
+        cap = NBf * ps
+        B = self.num_slots
+        queue = list(reqs)
+
+        pages_pre: List[int] = []
+        n_share = 0
+        tail: List[int] = []
+        if shared_prefix:
+            pages_pre, n_share, tail = eng.prefix_pages_for(shared_prefix, st)
+            if pages_pre:
+                eng._alloc.retain(pages_pre)
+        npre = len(pages_pre)
+
+        table = np.full((B, NBf), -1, np.int32)
+        slot_pages: List[List[int]] = [[] for _ in range(B)]
+        active: List[Optional[Request]] = [None] * B
+        states = [None] * B
+        outs: List[List[int]] = [[] for _ in range(B)]
+        budgets = np.zeros(B, np.int64)
+        positions = np.zeros(B, np.int32)
+        logits = np.full((B, eng.cfg.padded_vocab), NEG_INF, np.float32)
+        extra = eng._ssm_state(B) or None
+
+        def fill_slot(b: int, req: Request) -> bool:
+            """Allocate pages + prefill the slot. False ⇒ the (pinned) pool
+            cannot take the request right now — it stays queued until other
+            slots free pages."""
+            nonlocal extra
+            ids = tail + TOK.encode(req.prompt, bos=not shared_prefix)
+            tot = min(n_share + len(ids) + req.max_new_tokens, cap)
+            need = max(0, -(-tot // ps) - npre)
+            if not eng._ensure_pool(need):
+                return False
+            pg = eng._alloc.alloc(need)
+            slot_pages[b] = pg
+            if npre:
+                table[b, :npre] = pages_pre
+            table[b, npre:npre + need] = pg
+            table[b, npre + need:] = -1
+            slot_extra = {k: v[:, b:b + 1] for k, v in (extra or {}).items()} \
+                or None
+            lg, lens, pre, ex1 = eng.paged_prefill(
+                [ids], table[b:b + 1], pages_pre, n_share, extra=slot_extra)
+            if extra:
+                extra = {k: extra[k].at[:, b:b + 1].set(ex1[k])
+                         for k in extra}
+            st.prefill_tokens += pre
+            st.input_tokens += n_share + len(ids)
+            active[b] = req
+            states[b] = req.grammar.init_state() if req.grammar else None
+            outs[b] = []
+            budgets[b] = req.max_new_tokens
+            positions[b] = lens[0]
+            logits[b] = lg[0][:logits.shape[1]]
+            return True
+
+        def free_slot(b: int) -> None:
+            eng._alloc.release(slot_pages[b])
+            slot_pages[b] = []
+            table[b, :] = -1           # dead rows must never write pages
+
+        done_count = 0
+        ticks = 0
+        try:
+            while done_count < len(reqs):
+                stalled = False
+                for b in range(B):
+                    if active[b] is None and queue and not stalled:
+                        if fill_slot(b, queue[0]):
+                            queue.pop(0)
+                        else:
+                            stalled = True
+                live = [b for b in range(B) if active[b] is not None]
+                if not live:
+                    if queue:
+                        raise RuntimeError(
+                            f"page pool ({eng.page_pool_pages} pages) too "
+                            f"small for even one request")
+                    break
+
+                gs = [active[b].grammar if active[b] else None
+                      for b in range(B)]
+                toks = eng._sample(logits, gs, states, temperature)
+                done_count += self._advance_live(live, active, states, outs,
+                                                 budgets, toks, st, logits,
+                                                 free_slot)
+
+                if done_count >= len(reqs):
+                    break
+                live = [b for b in range(B) if active[b] is not None]
+                if not live:
+                    continue           # all finished this tick; refill next
+                nb = eng.active_blocks(positions[live])
+                lgn, extra_out = eng.paged_decode(toks, positions, table, nb,
+                                                  extra=extra)
+                if extra:
+                    extra = extra_out
+                for b in range(B):
+                    if active[b] is not None:
+                        logits[b] = lgn[b]
+                positions += 1
+                ticks += 1
+        finally:
+            # errors must not leak slot pages or the prefix retain: a
+            # pinned pool would shrink permanently
+            for b in range(B):
+                if slot_pages[b]:
+                    eng._alloc.release(slot_pages[b])
+                    slot_pages[b] = []
+            if pages_pre:
+                eng._alloc.release(pages_pre)
+        st.decode_steps += ticks
+        if eng._alloc is not None:
+            st.kv_bytes = eng._alloc.peak_in_use * eng._page_bytes()

@@ -72,6 +72,71 @@ def test_decode_attention(B, H, KV, D, L, fill, dtype):
                                np.asarray(r, np.float32), atol=tol, rtol=tol)
 
 
+# --------------------------- paged decode attention ---------------------------
+@pytest.mark.parametrize("B,H,KV,D,ps,NB,P", [
+    (2, 4, 2, 32, 16, 4, 12), (1, 8, 1, 64, 32, 2, 6),
+    (3, 4, 4, 80, 8, 8, 32),            # pads D to 128
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_paged(B, H, KV, D, ps, NB, P, dtype):
+    """Block-table Pallas kernel vs the gather-based jnp oracle, ragged
+    fills (some rows one block, some full)."""
+    ks = _split(3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kp = jax.random.normal(ks[1], (P, ps, KV, D), dtype)
+    vp = jax.random.normal(ks[2], (P, ps, KV, D), dtype)
+    rng = np.random.default_rng(B * 7 + NB)
+    fills = [int(rng.integers(1, NB * ps + 1)) for _ in range(B)]
+    bt = np.full((B, NB), -1, np.int32)
+    perm = iter(rng.permutation(P))
+    for b, f in enumerate(fills):
+        for j in range((f + ps - 1) // ps):
+            bt[b, j] = next(perm)
+    bt = jnp.asarray(bt)
+    qpos = jnp.asarray([f - 1 for f in fills], jnp.int32)
+
+    out = ops.decode_attention_paged(q, kp, vp, bt, qpos, interpret=True)
+
+    G = H // KV
+    qr = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    kf = kp.transpose(2, 0, 1, 3).reshape(KV * P, ps, D)
+    vf = vp.transpose(2, 0, 1, 3).reshape(KV * P, ps, D)
+    nact = jnp.asarray([(f - 1) // ps + 1 for f in fills], jnp.int32)
+    btf = (jnp.clip(bt, 0, P - 1)[:, None, :]
+           + jnp.arange(KV)[None, :, None] * P).reshape(B * KV, NB)
+    r = ref.decode_attention_paged_ref(
+        qr, kf, vf, btf, jnp.repeat(nact, KV),
+        jnp.repeat(qpos[:, None], KV, axis=0).reshape(B * KV, 1))
+    r = r.reshape(B, KV, G, D).reshape(B, H, D)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+def test_decode_attention_paged_shared_prefix_pages():
+    """Rows sharing the SAME prefix pages read them in place and attend
+    identically to a dense replication of that prefix."""
+    from repro.models import layers as L
+    B, H, KV, D, ps = 4, 4, 2, 32, 8
+    P, NB = 8, 3
+    ks = _split(3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (P, ps, KV, D))
+    vp = jax.random.normal(ks[2], (P, ps, KV, D))
+    # every row: shared pages [1, 2] + its own page (3 + b); fill = 20
+    bt = jnp.asarray([[1, 2, 3 + b] for b in range(B)], jnp.int32)
+    qpos = jnp.full((B,), 19, jnp.int32)
+    out = ops.decode_attention_paged(q, kp, vp, bt, qpos, interpret=True)
+
+    kd = kp[bt].reshape(B, NB * ps, KV, D)
+    vd = vp[bt].reshape(B, NB * ps, KV, D)
+    spos = jnp.broadcast_to(jnp.arange(NB * ps, dtype=jnp.int32)[None],
+                            (B, NB * ps))
+    r = L.decode_attention(q, kd, vd, spos, qpos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               atol=3e-5, rtol=3e-5)
+
+
 # --------------------------------- MoE gmm ------------------------------------
 @pytest.mark.parametrize("T,M,N,E,seed", [
     (64, 32, 48, 4, 0), (130, 64, 64, 8, 1), (33, 96, 16, 3, 2),
