@@ -63,6 +63,13 @@ class IPDB:
             # block-table page pool with zero-copy shared-prefix pages.
             # kv_pool_pages pins the pool size (None = grow on demand).
             "kv_layout": "dense", "kv_page_size": 64, "kv_pool_pages": None,
+            # paged-engine prefix reuse: "radix" discovers partial token
+            # overlap in a refcounted prefix tree; "exact" is the PR-5
+            # whole-string memo.  kv_quant="int8" stores tree-frozen pages
+            # as int8 with per-page scales (live pages stay fp).
+            # n_samples>1 decodes that many streams per row off a shared
+            # copy-on-write prompt fork and majority-votes the answer.
+            "kv_prefix_mode": "radix", "kv_quant": "none", "n_samples": 1,
             **DEFAULT_FLAGS,
         }
         if session_options:
@@ -146,9 +153,16 @@ class IPDB:
                 # paged-only knobs must not split behaviorally identical
                 # dense engines into separate instances
                 page_size, pool = 64, None
+            pmode = str(entry.options.get(
+                "kv_prefix_mode", self.options.get("kv_prefix_mode",
+                                                   "radix")))
+            quant = str(entry.options.get(
+                "kv_quant", self.options.get("kv_quant", "none")))
+            if layout == "dense":
+                pmode, quant = "radix", "none"
             # every option that shapes the engine is part of the cache
             # key — two models must never silently share a mismatched one
-            key = (arch, layout, page_size, pool, max_len)
+            key = (arch, layout, page_size, pool, max_len, pmode, quant)
             if key not in self._jax_engines:
                 import repro.configs as C
                 from repro.serving.engine import InferenceEngine
@@ -156,7 +170,8 @@ class IPDB:
                 self._jax_engines[key] = InferenceEngine(
                     cfg, max_len=max_len,
                     kv_layout=layout, page_size=page_size,
-                    page_pool_pages=pool)
+                    page_pool_pages=pool, prefix_cache_mode=pmode,
+                    kv_quant=quant)
             return JaxExecutor(self._jax_engines[key])
         if path.startswith("custom:"):
             name = path.split(":", 1)[1]
@@ -219,17 +234,27 @@ class IPDB:
         # Layouts come from the LIVE engines (a model can override the
         # session default per-entry); the option is the fallback before
         # any jax engine exists.
-        hits = prefill = decoded = 0
+        hits = prefill = decoded = radix_toks = 0
+        used = total = hwm = 0
         for eng in self._jax_engines.values():
             hits += eng.total.prefix_hits
             prefill += eng.total.prefill_tokens
             decoded += eng.total.output_tokens
+            radix_toks += eng.total.radix_hit_tokens
+            alloc = getattr(eng, "_alloc", None)
+            if alloc is not None:
+                used += alloc.resident_pages
+                total += alloc.num_pages
+                hwm += alloc.high_water
         layouts = sorted({k[1] for k in self._jax_engines}) \
             or [str(o.get("kv_layout", "dense"))]
-        line += ("\nEngine kv_layout={} kv_page_size={} prefix_hits={} "
-                 "prefill_tokens={} decode_tokens={}".format(
+        line += ("\nEngine kv_layout={} kv_page_size={} kv_quant={} "
+                 "prefix_hits={} radix_hit_tokens={} prefill_tokens={} "
+                 "decode_tokens={}".format(
                      ",".join(layouts), o.get("kv_page_size", 64),
-                     hits, prefill, decoded))
+                     o.get("kv_quant", "none"), hits, radix_toks,
+                     prefill, decoded))
+        line += "\npool: {}/{} pages, hwm={}".format(used, total, hwm)
         return line
 
     def _stats_repr(self, plan: Node) -> str:

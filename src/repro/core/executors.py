@@ -41,7 +41,8 @@ class CallResult:
     # backends have no visible prefill/decode split and leave them 0)
     prefill_tokens: int = 0       # tokens actually prefit through the model
     decode_tokens: int = 0        # lock-step decode tokens generated
-    prefix_hits: int = 0          # shared-prefix KV memo hits
+    prefix_hits: int = 0          # shared-prefix KV memo/radix hits
+    radix_hit_tokens: int = 0     # prompt tokens served from the radix tree
 
 
 class Predictor:
@@ -121,17 +122,26 @@ class JaxExecutor(Predictor):
     def complete(self, prompt, schema, num_rows, *, shared_prefix="",
                  rows=None, instruction=""):
         g = self._grammar(schema, num_rows)
+        ns = max(1, int(self.options.get("n_samples", 1)))
         t0 = time.time()
         res = self.engine.generate(
-            [prompt], grammar=g, shared_prefix=shared_prefix,
+            [prompt] * ns, grammar=g, shared_prefix=shared_prefix,
             max_new_tokens=int(self.options.get("max_tokens", 4096)),
             temperature=float(self.options.get("temperature", 0.7)))
         wall = time.time() - t0
         s = res.stats
-        return CallResult(res.texts[0], s.input_tokens, s.output_tokens,
+        if ns > 1:
+            # self-consistency: majority text across the sampled streams
+            # (the paged engine shares their prompt KV zero-copy)
+            from repro.serving.scheduler import _vote
+            text = _vote(res.texts)
+        else:
+            text = res.texts[0]
+        return CallResult(text, s.input_tokens, s.output_tokens,
                           wall, wall, prefill_tokens=s.prefill_tokens,
                           decode_tokens=s.output_tokens,
-                          prefix_hits=s.prefix_hits)
+                          prefix_hits=s.prefix_hits,
+                          radix_hit_tokens=s.radix_hit_tokens)
 
     def complete_many(self, prompts, schema, num_rows_list, *,
                       shared_prefix="", rows_list=None, instruction=""):
@@ -153,24 +163,45 @@ class JaxExecutor(Predictor):
         # the prompts below may be stripped from them
         prefix = shared_prefix
         run_prompts = list(prompts)
-        if paged and not prefix:
-            # marshaled prompts all start with the same instruction text:
-            # carve the common prefix out and prefill it once into shared
-            # pages (only worth it at >= one full page).  Keep every
-            # suffix non-empty — a prompt that EQUALS the common prefix
-            # must still contribute its last token to the prefill
-            common = os.path.commonprefix(run_prompts)
-            common = common[:max(0, min(len(p) for p in run_prompts) - 1)]
+        radix = getattr(self.engine, "prefix_cache_mode", "exact") == "radix"
+        if paged and not prefix and not radix:
+            # Exact mode only: marshaled prompts all start with the same
+            # instruction text, so carve the common prefix out and prefill
+            # it once into shared pages (only worth it at >= one full
+            # page).  The radix engine skips this — partial overlap is
+            # discovered token-by-token at match time, and a text-level
+            # carve would only constrain it.
+            #
+            # The carve must land on a TOKEN boundary: tokens are UTF-8
+            # bytes, so compare byte encodings (two prompts can share a
+            # lead byte inside a multi-byte character that a character
+            # comparison would miss), trim in byte units, then back off
+            # until the cut decodes — prefix/suffix stay real strings.
+            # Keep every suffix non-empty — a prompt that EQUALS the
+            # common prefix must still contribute its last token to the
+            # prefill.
+            enc = [p.encode("utf-8") for p in run_prompts]
+            cb = os.path.commonprefix(enc)
+            cb = cb[:max(0, min(len(e) for e in enc) - 1)]
+            common = ""
+            while cb:
+                try:
+                    common = cb.decode("utf-8")
+                    break
+                except UnicodeDecodeError:
+                    cb = cb[:-1]
             if TOK.count_tokens(common) + 1 >= self.engine.page_size:
                 prefix = common
                 run_prompts = [p[len(prefix):] for p in prompts]
         max_new = min(int(self.options.get("max_tokens", 4096)),
                       self.engine.max_len)
+        ns = max(1, int(self.options.get("n_samples", 1)))
         reqs = [Request(prompt=p, grammar=self._grammar(schema, nr),
-                        max_new_tokens=max_new)
+                        max_new_tokens=max_new, n_samples=ns)
                 for p, nr in zip(run_prompts, num_rows_list)]
         bs = self._batcher.stats
-        before = (bs.prefill_tokens, bs.output_tokens, bs.prefix_hits)
+        before = (bs.prefill_tokens, bs.output_tokens, bs.prefix_hits,
+                  bs.radix_hit_tokens)
         t0 = time.time()
         done = self._batcher.run(
             reqs, temperature=float(self.options.get("temperature", 0.7)),
@@ -188,6 +219,7 @@ class JaxExecutor(Predictor):
         out[0].prefill_tokens = bs.prefill_tokens - before[0]
         out[0].decode_tokens = bs.output_tokens - before[1]
         out[0].prefix_hits = bs.prefix_hits - before[2]
+        out[0].radix_hit_tokens = bs.radix_hit_tokens - before[3]
         return out
 
 

@@ -57,6 +57,7 @@ DEFAULTS = {
     "inflight_windows": 1,   # chunks kept submitted ahead of resolution
     "dispatch_workers": 1,   # per-backend dispatch pool (1 = synchronous)
     "num_slots": 8,          # continuous-batching decode slots (jax)
+    "n_samples": 1,          # self-consistency streams per row (jax)
 }
 
 
@@ -79,7 +80,8 @@ class PredictStats:
     # engine-side serving accounting (jax backend; zero for API backends)
     prefill_tokens: int = 0        # tokens prefit through the model
     decode_tokens: int = 0         # lock-step decode tokens generated
-    prefix_hits: int = 0           # shared-prefix KV memo hits
+    prefix_hits: int = 0           # shared-prefix KV memo/radix hits
+    radix_hit_tokens: int = 0      # prompt tokens served from the radix tree
 
     def add(self, o: "PredictStats") -> None:
         for f in dataclasses.fields(self):
@@ -530,6 +532,7 @@ class PredictOperator:
         self.stats.prefill_tokens += res.prefill_tokens
         self.stats.decode_tokens += res.decode_tokens
         self.stats.prefix_hits += res.prefix_hits
+        self.stats.radix_hit_tokens += res.radix_hit_tokens
 
     def _note_retry(self) -> None:
         self.stats.retries += 1

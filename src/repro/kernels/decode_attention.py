@@ -137,6 +137,7 @@ def _paged_kernel(bt_ref, nact_ref, qpos_ref, q_ref, k_ref, v_ref,
 
 def decode_attention_paged_pallas(q, k_pool, v_pool, block_tables,
                                   num_active, q_position, *,
+                                  scale: float = None,
                                   interpret: bool = False):
     """q (BK, G, D); k_pool, v_pool (P, ps, D) global page pools;
     block_tables (BK, NB) int32 page ids (must be valid pool indices — the
@@ -146,11 +147,17 @@ def decode_attention_paged_pallas(q, k_pool, v_pool, block_tables,
     The block table, fill counts and query positions are scalar-prefetched
     so the k/v BlockSpec index_map dereferences the table: block j of
     sequence b is fetched from pool page block_tables[b, j] — the kernel
-    reads shared (e.g. instruction-prefix) pages in place, no gather."""
+    reads shared (e.g. instruction-prefix) pages in place, no gather.
+
+    scale overrides the softmax scale (default 1/sqrt(D)): when D is the
+    zero-padded lane width the caller passes 1/sqrt(true head_dim) — the
+    padded lanes contribute 0 to the dot so no q-side compensation is
+    needed."""
     BK, G, D = q.shape
     P, ps, _ = k_pool.shape
     NB = block_tables.shape[1]
-    scale = 1.0 / math.sqrt(D)
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
 
     kern = functools.partial(_paged_kernel, scale=scale, ps=ps, nb=NB)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -174,4 +181,98 @@ def decode_attention_paged_pallas(q, k_pool, v_pool, block_tables,
         out_shape=jax.ShapeDtypeStruct((BK, G, D), q.dtype),
         interpret=interpret,
     )(block_tables, num_active, q_position, q, k_pool, v_pool)
+    return out
+
+
+# --------------------------- paged layout, int8 pages --------------------------
+def _paged_quant_kernel(bt_ref, nact_ref, qpos_ref, q_ref, k_ref, v_ref,
+                        kq_ref, vq_ref, ks_ref, vs_ref, fl_ref,
+                        o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                        ps: int, nb: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j < nact_ref[b])
+    def _block():
+        qpos = qpos_ref[b]
+        q = q_ref[0].astype(jnp.float32) * scale             # (G, D)
+        # frozen pages read the int8 shadow × per-page scale; live pages
+        # read the fp pool — both blocks arrive via the same table-chased
+        # index_map, the select is pure VPU work
+        frozen = fl_ref[0, 0] > 0
+        k = jnp.where(frozen,
+                      kq_ref[0].astype(jnp.float32) * ks_ref[0, 0],
+                      k_ref[0].astype(jnp.float32))          # (ps, D)
+        v = jnp.where(frozen,
+                      vq_ref[0].astype(jnp.float32) * vs_ref[0, 0],
+                      v_ref[0].astype(jnp.float32))
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (G, ps)
+        tok = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        s = jnp.where(tok <= qpos, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def decode_attention_paged_quant_pallas(q, k_pool, v_pool, kq_pool, vq_pool,
+                                        kscale, vscale, quant_flags,
+                                        block_tables, num_active, q_position,
+                                        *, scale: float = None,
+                                        interpret: bool = False):
+    """Quant-aware twin of decode_attention_paged_pallas: kq_pool/vq_pool
+    (P, ps, D) int8 shadow pools; kscale/vscale (P, 1) float32 per-page
+    scales; quant_flags (P, 1) int32 (>0 ⇒ page is frozen/quantized).
+    Remaining arguments and the streamed-softmax structure are identical —
+    the only delta is a per-page dequant select on the fetched block."""
+    BK, G, D = q.shape
+    P, ps, _ = k_pool.shape
+    NB = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+
+    kern = functools.partial(_paged_quant_kernel, scale=scale, ps=ps, nb=NB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(BK, NB),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda b, j, bt, na, qp: (b, 0, 0)),
+            pl.BlockSpec((1, ps, D), lambda b, j, bt, na, qp: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, ps, D), lambda b, j, bt, na, qp: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, ps, D), lambda b, j, bt, na, qp: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, ps, D), lambda b, j, bt, na, qp: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, bt, na, qp: (bt[b, j], 0)),
+            pl.BlockSpec((1, 1), lambda b, j, bt, na, qp: (bt[b, j], 0)),
+            pl.BlockSpec((1, 1), lambda b, j, bt, na, qp: (bt[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda b, j, bt, na, qp: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BK, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, num_active, q_position, q, k_pool, v_pool,
+      kq_pool, vq_pool, kscale, vscale, quant_flags)
     return out

@@ -15,8 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.constrained_logits import constrained_sample_pallas
-from repro.kernels.decode_attention import (decode_attention_paged_pallas,
-                                            decode_attention_pallas)
+from repro.kernels.decode_attention import (
+    decode_attention_paged_pallas, decode_attention_paged_quant_pallas,
+    decode_attention_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gmm import gmm_pallas
 from repro.kernels.selective_scan import selective_scan_pallas
@@ -108,30 +109,37 @@ def decode_attention(q, k_cache, v_cache, slot_positions, q_position, *,
     return o.reshape(B, KV, G, Dp).reshape(B, H, Dp)[..., :D]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("head_dim", "interpret"))
 def decode_attention_paged(q, k_pool, v_pool, block_tables, q_position, *,
+                           head_dim: Optional[int] = None, quant=None,
                            interpret: Optional[bool] = None):
-    """Paged decode attention with natural shapes: q (B, H, D); pools
-    (P, ps, KV, D); block_tables (B, NB) int32 page ids (-1 = invalid);
-    q_position (B,). Returns (B, H, D).
+    """Paged decode attention over the pre-folded pool layout: q (B, H, D);
+    pools (KV, P, ps, Dp) with Dp = head_dim already zero-padded to the
+    128-lane width, so the kernel's (KV·P, ps, Dp) view is a FREE reshape —
+    no per-step transpose or pad.  block_tables (B, NB) int32 page ids
+    (-1 = invalid); q_position (B,). Returns (B, H, D).
 
     GQA folding duplicates only the tiny block table — the pool itself is
-    reshaped per kv-head slice, not per batch row.  Inactive/invalid table
+    addressed per kv-head slice, not per batch row.  Inactive/invalid table
     entries are rewritten to the row's last active page so the kernel
     pipeline revisits an already-resident page (no extra DMA) while the
-    predicated body skips the compute.  (On TPU one would keep the pool
-    pre-transposed/padded to this folded layout; the per-call transpose
-    here mirrors what the dense wrapper already pays.)"""
+    predicated body skips the compute.  The softmax scale is 1/sqrt(true
+    head_dim): padded lanes are zero on both q and k, so they drop out of
+    the dot with no q-side compensation.
+
+    quant (dict or None): int8 shadow pools "kq"/"vq" (KV, P, ps, Dp),
+    per-page scales "kscale"/"vscale" (KV, P) and frozen flags "flags"
+    (P,) — dispatches to the dequantizing kernel twin."""
     interpret = use_interpret() if interpret is None else interpret
     B, H, D = q.shape
-    P, ps, KV, _ = k_pool.shape
+    KV, P, ps, Dp = k_pool.shape
+    D = head_dim or D
     NB = block_tables.shape[1]
     G = H // KV
-    Dp = _round_up(D, 128)
 
     qf = _pad_axis(q, 2, Dp).reshape(B, KV, G, Dp).reshape(B * KV, G, Dp)
-    kf = _pad_axis(k_pool, 3, Dp).transpose(2, 0, 1, 3).reshape(KV * P, ps, Dp)
-    vf = _pad_axis(v_pool, 3, Dp).transpose(2, 0, 1, 3).reshape(KV * P, ps, Dp)
+    kf = k_pool.reshape(KV * P, ps, Dp)
+    vf = v_pool.reshape(KV * P, ps, Dp)
 
     qpos = q_position.astype(jnp.int32)
     nact = jnp.clip(jnp.clip(qpos, 0, None) // ps + 1, 1, NB)       # (B,)
@@ -146,9 +154,20 @@ def decode_attention_paged(q, k_pool, v_pool, block_tables, q_position, *,
     nactf = jnp.repeat(nact, KV)
     qposf = jnp.repeat(qpos, KV)
 
-    qf = qf * jnp.asarray((Dp / D) ** 0.5, qf.dtype)
-    o = decode_attention_paged_pallas(qf, kf, vf, btf, nactf, qposf,
-                                      interpret=interpret)
+    scale = 1.0 / (D ** 0.5)
+    if quant is not None:
+        kqf = quant["kq"].reshape(KV * P, ps, Dp)
+        vqf = quant["vq"].reshape(KV * P, ps, Dp)
+        ksf = quant["kscale"].reshape(KV * P, 1).astype(jnp.float32)
+        vsf = quant["vscale"].reshape(KV * P, 1).astype(jnp.float32)
+        flf = jnp.tile(quant["flags"].astype(jnp.int32)[None, :],
+                       (KV, 1)).reshape(KV * P, 1)
+        o = decode_attention_paged_quant_pallas(
+            qf, kf, vf, kqf, vqf, ksf, vsf, flf, btf, nactf, qposf,
+            scale=scale, interpret=interpret)
+    else:
+        o = decode_attention_paged_pallas(qf, kf, vf, btf, nactf, qposf,
+                                          scale=scale, interpret=interpret)
     return o.reshape(B, KV, G, Dp).reshape(B, H, Dp)[..., :D]
 
 

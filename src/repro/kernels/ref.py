@@ -65,6 +65,22 @@ def decode_attention_paged_ref(q, k_pool, v_pool, block_tables, num_active,
     return decode_attention_ref(q, k, v, pos, q_position)
 
 
+def decode_attention_paged_quant_ref(q, k_pool, v_pool, kq_pool, vq_pool,
+                                     kscale, vscale, quant_flags,
+                                     block_tables, num_active, q_position):
+    """Quant-aware oracle: kq_pool/vq_pool (P, ps, D) int8 shadows;
+    kscale/vscale (P, 1) per-page scales; quant_flags (P, 1) int32 (>0 ⇒
+    frozen/quantized page). Dequantizes frozen pages, then reuses the
+    paged oracle."""
+    frozen = (quant_flags[:, 0] > 0)[:, None, None]
+    k = jnp.where(frozen, kq_pool.astype(jnp.float32) * kscale[..., None],
+                  k_pool.astype(jnp.float32)).astype(k_pool.dtype)
+    v = jnp.where(frozen, vq_pool.astype(jnp.float32) * vscale[..., None],
+                  v_pool.astype(jnp.float32)).astype(v_pool.dtype)
+    return decode_attention_paged_ref(q, k, v, block_tables, num_active,
+                                      q_position)
+
+
 def gmm_ref(x, w, group_sizes):
     """x (T, M) rows sorted by expert; w (E, M, N); group_sizes (E,).
     Dense oracle via per-row expert ids."""

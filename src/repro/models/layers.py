@@ -322,23 +322,41 @@ def decode_attention(q, k_cache, v_cache, cache_positions, q_position):
 
 
 # -- paged decode attention (block-table addressed page pool) -------------------
-def decode_attention_paged(q, k_pool, v_pool, block_tables, q_position):
-    """q (B, H, D); pools (P, ps, KV, D) — a GLOBAL page pool shared by all
+def decode_attention_paged(q, k_pool, v_pool, block_tables, q_position, *,
+                           head_dim=None, quant=None):
+    """q (B, H, D); pools pre-folded (KV, P, ps, Dp) with Dp = head_dim
+    zero-padded to the 128-lane width — a GLOBAL page pool shared by all
     sequences (and, for a shared instruction prefix, by all batch rows);
     block_tables (B, NB) int32 page ids (-1 = invalid entry); q_position
     (B,). Returns (B, H, D).
 
     Paged-layout invariant: logical slot index == absolute token position,
     so slot validity is just `index <= q_position` plus table-entry
-    validity. Pure jnp (gathers the pages); the zero-gather Pallas twin
+    validity. quant (dict or None) carries int8 shadow pools "kq"/"vq"
+    (KV, P, ps, Dp), per-page scales "kscale"/"vscale" (KV, P) and frozen
+    flags "flags" (P,): frozen pages are read from the dequantized shadow,
+    live pages from the fp pool. Gathered pages are sliced back to the true
+    head_dim before the softmax so the math is bit-identical to the dense
+    layout. Pure jnp (gathers the pages); the zero-gather Pallas twin
     lives in kernels/decode_attention.
     """
     B, H, D = q.shape
-    P, ps, KV, _ = k_pool.shape
+    KV, P, ps, Dp = k_pool.shape
+    D = head_dim or D
     NB = block_tables.shape[1]
     safe = jnp.clip(block_tables, 0, P - 1)
-    k = k_pool[safe].reshape(B, NB * ps, KV, D)
-    v = v_pool[safe].reshape(B, NB * ps, KV, D)
+    k = k_pool[:, safe]                               # (KV, B, NB, ps, Dp)
+    v = v_pool[:, safe]
+    if quant is not None:
+        fl = (quant["flags"][safe] > 0)[None, :, :, None, None]
+        kdq = (quant["kq"][:, safe].astype(jnp.float32)
+               * quant["kscale"][:, safe][..., None, None]).astype(k.dtype)
+        vdq = (quant["vq"][:, safe].astype(jnp.float32)
+               * quant["vscale"][:, safe][..., None, None]).astype(v.dtype)
+        k = jnp.where(fl, kdq, k)
+        v = jnp.where(fl, vdq, v)
+    k = k.transpose(1, 2, 3, 0, 4).reshape(B, NB * ps, KV, Dp)[..., :D]
+    v = v.transpose(1, 2, 3, 0, 4).reshape(B, NB * ps, KV, Dp)[..., :D]
     pos = jnp.broadcast_to(jnp.arange(NB * ps, dtype=jnp.int32)[None],
                            (B, NB * ps))
     valid = jnp.repeat(block_tables >= 0, ps, axis=1)

@@ -186,19 +186,42 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
     return out
 
 
+def padded_head_dim(head_dim: int) -> int:
+    """Pool lane width: head_dim zero-padded up to the TPU register lane
+    count so the Pallas kernel's (KV·P, ps, 128) view is a free reshape."""
+    return -(-head_dim // 128) * 128
+
+
 def paged_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
-                      batch: int) -> Dict[str, Any]:
+                      batch: int, quant: bool = False) -> Dict[str, Any]:
     """Paged KV layout: one GLOBAL pool of fixed-size pages per layer
     instead of per-row dense caches.  Sequences address the pool through a
     per-row block table (passed separately, host-managed), so a shared
     instruction prefix is one set of pages referenced by every row.  SSM
-    conv/h state stays per-row dense — it is O(1) in sequence length."""
+    conv/h state stays per-row dense — it is O(1) in sequence length.
+
+    Pools are stored pre-folded as (layers, KV, P, ps, Dp) with head_dim
+    zero-padded to Dp = 128 lanes: the per-layer (KV, P, ps, Dp) slice
+    reshapes to the Pallas kernel's (KV·P, ps, Dp) view for free, so the
+    decode step pays no per-step transpose.  With `quant`, int8 shadow
+    pools plus per-(layer, kv-head, page) scales are added for
+    quantize-on-commit of frozen shared-prefix pages."""
     ln, cd = cfg.num_layers, _dt(cfg.compute_dtype)
     out: Dict[str, Any] = {"idx": jax.ShapeDtypeStruct((), jnp.int32)}
     if cfg.has_attention:
         kv, hd = cfg.num_kv_heads, cfg.head_dim
-        out["k"] = jax.ShapeDtypeStruct((ln, num_pages, page_size, kv, hd), cd)
-        out["v"] = jax.ShapeDtypeStruct((ln, num_pages, page_size, kv, hd), cd)
+        dp = padded_head_dim(hd)
+        out["k"] = jax.ShapeDtypeStruct((ln, kv, num_pages, page_size, dp), cd)
+        out["v"] = jax.ShapeDtypeStruct((ln, kv, num_pages, page_size, dp), cd)
+        if quant:
+            out["kq"] = jax.ShapeDtypeStruct(
+                (ln, kv, num_pages, page_size, dp), jnp.int8)
+            out["vq"] = jax.ShapeDtypeStruct(
+                (ln, kv, num_pages, page_size, dp), jnp.int8)
+            out["kscale"] = jax.ShapeDtypeStruct((ln, kv, num_pages),
+                                                 jnp.float32)
+            out["vscale"] = jax.ShapeDtypeStruct((ln, kv, num_pages),
+                                                 jnp.float32)
     if cfg.has_ssm:
         out["conv"] = jax.ShapeDtypeStruct(
             (ln, batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.float32)
@@ -208,8 +231,8 @@ def paged_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
 
 
 def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                     batch: int = 0) -> Dict[str, Any]:
-    specs = paged_cache_specs(cfg, num_pages, page_size, batch)
+                     batch: int = 0, quant: bool = False) -> Dict[str, Any]:
+    specs = paged_cache_specs(cfg, num_pages, page_size, batch, quant)
     return {k: jnp.zeros(s.shape, s.dtype) for k, s in specs.items()}
 
 
@@ -222,6 +245,31 @@ def _norm_p(lp: Dict[str, jax.Array], prefix: str) -> Optional[dict]:
     return {"scale": scale, "bias": bias}
 
 
+def _fold_write(x: jax.Array, dp: int) -> jax.Array:
+    """(..., KV, D) → (KV, ..., Dp): move the kv-head axis to the front and
+    zero-pad head_dim to the pool's padded lane width."""
+    x = jnp.moveaxis(x, -2, 0)
+    pad = dp - x.shape[-1]
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x
+
+
+def _dequant_pages(qd: Dict[str, jax.Array], safe_pages: jax.Array,
+                   kp: jax.Array, vp: jax.Array):
+    """Replace frozen (quantized) pages of a gathered fp view with their
+    dequantized int8 shadow.  safe_pages (npre,) clipped page ids;
+    kp/vp (KV, npre, ps, Dp) gathered fp pages."""
+    fl = qd["flags"][safe_pages] > 0                       # (npre,)
+    kdq = (qd["kq"][:, safe_pages].astype(jnp.float32)
+           * qd["kscale"][:, safe_pages][..., None, None]).astype(kp.dtype)
+    vdq = (qd["vq"][:, safe_pages].astype(jnp.float32)
+           * qd["vscale"][:, safe_pages][..., None, None]).astype(vp.dtype)
+    kp = jnp.where(fl[None, :, None, None], kdq, kp)
+    vp = jnp.where(fl[None, :, None, None], vdq, vp)
+    return kp, vp
+
+
 def _attention(cfg: ModelConfig, x, lp, positions, mode, ck, cv, slot_pos, idx,
                attn_fn=None, decode_attn_fn=None, extend_offset: int = 0,
                row_idx=None, kv_cs=MOE.Identity, paged=None):
@@ -229,10 +277,13 @@ def _attention(cfg: ModelConfig, x, lp, positions, mode, ck, cv, slot_pos, idx,
     extend_offset > 0 (prefill mode): attend over [cache[:offset] ++ new] and
     write the new K/V at slot offset — chunked prefill / shared-prefix reuse.
     paged (dict or None): block-table addressed page-pool layout — ck/cv are
-    then (P, ps, KV, D) pools, paged["block_tables"] is (B, NB) page ids
-    (-1 = invalid; invalid/out-of-range writes are dropped), and prefill may
+    then pre-folded (KV, P, ps, Dp) pools (Dp = head_dim padded to 128),
+    paged["block_tables"] is (B, NB) page ids
+    (-1 = invalid; invalid/out-of-range writes are dropped), prefill may
     carry paged["prefix_table"]/["prefix_len"] pointing at shared prefix
-    pages that are read in place, never replicated per row."""
+    pages that are read in place, never replicated per row, and
+    paged["quant"] (if set) holds int8 shadow pools + per-page scales +
+    frozen flags for dequantizing committed shared pages on read."""
     B, S, m = x.shape
     h, kv, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
     cd = _dt(cfg.compute_dtype)
@@ -252,7 +303,7 @@ def _attention(cfg: ModelConfig, x, lp, positions, mode, ck, cv, slot_pos, idx,
     new_ck, new_cv = ck, cv
     if paged is not None and mode == "decode":
         bt = paged["block_tables"]
-        P_, ps_ = ck.shape[0], ck.shape[1]
+        KV_, P_, ps_, Dp_ = ck.shape
         NB_ = bt.shape[1]
         pos = positions[:, 0]                                     # (B,)
         blk = jnp.clip(pos, 0, None) // ps_
@@ -265,10 +316,16 @@ def _attention(cfg: ModelConfig, x, lp, positions, mode, ck, cv, slot_pos, idx,
         ok = (pos >= 0) & (blk < NB_) & (entry >= 0)
         page = jnp.where(ok, entry, P_)        # P_ is out of bounds → drop
         off = jnp.clip(pos, 0, None) % ps_
-        new_ck = ck.at[page, off].set(k[:, 0].astype(ck.dtype), mode="drop")
-        new_cv = cv.at[page, off].set(v[:, 0].astype(cv.dtype), mode="drop")
+        # per-axis indexing keeps the P_ out-of-bounds drop trick safe: the
+        # page axis is indexed on its own, so an invalid id can never fold
+        # into a neighbouring kv-head's page 0
+        new_ck = ck.at[:, page, off].set(
+            _fold_write(k[:, 0], Dp_).astype(ck.dtype), mode="drop")
+        new_cv = cv.at[:, page, off].set(
+            _fold_write(v[:, 0], Dp_).astype(cv.dtype), mode="drop")
         fn = decode_attn_fn or L.decode_attention_paged
-        o = fn(q[:, 0], new_ck, new_cv, bt, pos)[:, None]
+        o = fn(q[:, 0], new_ck, new_cv, bt, pos, head_dim=hd,
+               quant=paged.get("quant"))[:, None]
     elif paged is not None:
         # paged prefill: suffix flash vs its own KV merged with a broadcast
         # (never replicated) read of the shared prefix pages; new KV is
@@ -277,22 +334,29 @@ def _attention(cfg: ModelConfig, x, lp, positions, mode, ck, cv, slot_pos, idx,
         bt = paged["block_tables"]
         pt = paged.get("prefix_table")
         plen = paged.get("prefix_len", jnp.int32(0))
-        P_, ps_ = ck.shape[0], ck.shape[1]
+        KV_, P_, ps_, Dp_ = ck.shape
         NB_ = bt.shape[1]
         if pt is not None and pt.shape[0]:
-            kp = ck[jnp.clip(pt, 0, P_ - 1)].reshape((-1,) + ck.shape[2:])
-            vp = cv[jnp.clip(pt, 0, P_ - 1)].reshape((-1,) + cv.shape[2:])
+            safe_pt = jnp.clip(pt, 0, P_ - 1)
+            kp = ck[:, safe_pt]                       # (KV, npre, ps, Dp)
+            vp = cv[:, safe_pt]
+            if paged.get("quant") is not None:
+                kp, vp = _dequant_pages(paged["quant"], safe_pt, kp, vp)
+            kp = kp.transpose(1, 2, 0, 3).reshape(-1, KV_, Dp_)[..., :hd]
+            vp = vp.transpose(1, 2, 0, 3).reshape(-1, KV_, Dp_)[..., :hd]
         else:
-            kp = ck[:0].reshape((0,) + ck.shape[2:])
-            vp = cv[:0].reshape((0,) + cv.shape[2:])
+            kp = jnp.zeros((0, KV_, hd), ck.dtype)
+            vp = jnp.zeros((0, KV_, hd), cv.dtype)
         o = L.prefix_suffix_attention(q, kp, vp, k, v, positions, plen)
         blk = jnp.clip(positions, 0, None) // ps_                 # (B, S)
         entry = jnp.take_along_axis(bt, jnp.clip(blk, 0, NB_ - 1), axis=1)
         ok = (positions >= 0) & (blk < NB_) & (entry >= 0)
         page = jnp.where(ok, entry, P_)
         off = jnp.clip(positions, 0, None) % ps_
-        new_ck = ck.at[page, off].set(k.astype(ck.dtype), mode="drop")
-        new_cv = cv.at[page, off].set(v.astype(cv.dtype), mode="drop")
+        new_ck = ck.at[:, page, off].set(
+            _fold_write(k, Dp_).astype(ck.dtype), mode="drop")
+        new_cv = cv.at[:, page, off].set(
+            _fold_write(v, Dp_).astype(cv.dtype), mode="drop")
     elif mode == "decode":
         lc = ck.shape[1]
         if row_idx is not None:
@@ -354,6 +418,13 @@ def _block(cfg: ModelConfig, x, lp, positions, mode, cache_l, *,
     new_cache = dict(cache_l)
     slot_pos = cache_l.get("slot_pos")
     idx = cache_l.get("idx", jnp.int32(0))
+    if paged is not None and "kq" in cache_l:
+        # attach this layer's int8 shadow pool + scales (scanned-in slices)
+        # alongside the shared frozen-page flags
+        paged = {**paged, "quant": {
+            "kq": cache_l["kq"], "vq": cache_l["vq"],
+            "kscale": cache_l["kscale"], "vscale": cache_l["vscale"],
+            "flags": paged["quant_flags"]}}
 
     if cfg.family == HYBRID:
         xin = L.apply_norm(cfg.norm_type, x, _norm_p(lp, "ln_attn"))
@@ -424,7 +495,7 @@ def _block(cfg: ModelConfig, x, lp, positions, mode, cache_l, *,
 
 
 # ============================== full forward ==================================
-_LAYER_CACHE_KEYS = ("k", "v", "conv", "h")
+_LAYER_CACHE_KEYS = ("k", "v", "kq", "vq", "kscale", "vscale", "conv", "h")
 
 
 def forward(cfg: ModelConfig, params: PyTree, batch: Dict[str, jax.Array],
@@ -473,6 +544,8 @@ def forward(cfg: ModelConfig, params: PyTree, batch: Dict[str, jax.Array],
         if "prefix_table" in shared_cache:
             paged["prefix_table"] = shared_cache["prefix_table"]
             paged["prefix_len"] = shared_cache.get("prefix_len", jnp.int32(0))
+        if "quant_flags" in shared_cache:
+            paged["quant_flags"] = shared_cache["quant_flags"]
 
     x = residual_cs(x)
 

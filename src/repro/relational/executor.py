@@ -48,6 +48,7 @@ class ExecStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     prefix_hits: int = 0
+    radix_hit_tokens: int = 0       # prompt tokens served from the radix tree
 
     @property
     def tokens(self) -> int:
@@ -109,3 +110,4 @@ class PlanExecutor:
         self.stats.prefill_tokens += s.prefill_tokens
         self.stats.decode_tokens += s.decode_tokens
         self.stats.prefix_hits += s.prefix_hits
+        self.stats.radix_hit_tokens += s.radix_hit_tokens

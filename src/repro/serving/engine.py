@@ -32,6 +32,7 @@ from repro.models import model as MDL
 from repro.models.config import ModelConfig
 from repro.serving import tokenizer as TOK
 from repro.serving.grammar import JsonGrammar
+from repro.serving.radix import RadixPrefixCache
 
 NEG_INF = -1e30
 
@@ -52,6 +53,8 @@ class GenStats:
     decode_steps: int = 0
     wall_s: float = 0.0
     prefix_hits: int = 0
+    radix_hit_tokens: int = 0      # prompt tokens served from the radix tree
+    cow_copies: int = 0            # pages privatized by copy-on-write forks
     kv_bytes: int = 0              # peak KV-cache footprint (high-water)
 
     def add(self, other: "GenStats") -> None:
@@ -88,6 +91,15 @@ class PageAllocator:
     @property
     def in_use(self) -> int:
         return self.num_pages - len(self._free)
+
+    @property
+    def resident_pages(self) -> int:
+        """Pages currently referenced by anyone (memo, radix tree, runs)."""
+        return self.in_use
+
+    @property
+    def high_water(self) -> int:
+        return self.peak_in_use
 
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
@@ -143,9 +155,13 @@ class InferenceEngine:
                  kv_layout: str = "dense", page_size: int = 64,
                  page_pool_pages: Optional[int] = None,
                  prefix_memo_entries: int = 16,
-                 use_pallas_decode: bool = False):
+                 use_pallas_decode: bool = False,
+                 prefix_cache_mode: str = "radix",
+                 kv_quant: str = "none"):
         assert cfg.supports_decode, f"{cfg.name} cannot generate"
         assert kv_layout in ("dense", "paged"), kv_layout
+        assert prefix_cache_mode in ("exact", "radix"), prefix_cache_mode
+        assert kv_quant in ("none", "int8"), kv_quant
         if kv_layout == "paged":
             assert cfg.has_attention, "paged KV layout needs attention"
         self.cfg = cfg
@@ -158,6 +174,12 @@ class InferenceEngine:
         self.page_size = int(page_size)
         self.page_pool_pages = page_pool_pages
         self.prefix_memo_entries = int(prefix_memo_entries)
+        #: "radix": partial-overlap prefix reuse through a refcounted radix
+        #: tree over token sequences; "exact": PR-5 exact-string prefix memo
+        self.prefix_cache_mode = prefix_cache_mode
+        #: "int8": frozen (tree-committed) pages are quantized on commit to
+        #: an int8 shadow pool with per-page scales; live pages stay fp
+        self.kv_quant = kv_quant
         #: per-row block-table width: max_len tokens worth of pages
         self.num_table_blocks = max(1, -(-max_len // self.page_size))
         self._prefill_cache: Dict[Tuple, object] = {}
@@ -169,9 +191,15 @@ class InferenceEngine:
         self._rng = np.random.default_rng(seed)
         #: session-cumulative stats (EXPLAIN `-- dispatch --` surfacing)
         self.total = GenStats()
-        # paged-layout state (lazy): device page pool + host allocator
+        # paged-layout state (lazy): device page pool + host allocator +
+        # radix prefix tree + host-side frozen-page quant flags
         self._pool: Optional[Dict[str, jax.Array]] = None
         self._alloc: Optional[PageAllocator] = None
+        self._radix: Optional[RadixPrefixCache] = None
+        self._quant_flags: Optional[np.ndarray] = None
+        #: running peak of the pool's logical KV bytes, counting quantized
+        #: pages at 1 byte/element — the `kv_bytes` number runs report
+        self.kv_peak_bytes = 0
 
     # ----------------------------- compiled steps -----------------------------
     def _prefill_fn(self, batch: int, length: int, offset: int):
@@ -219,8 +247,10 @@ class InferenceEngine:
                 from repro.kernels import ops as KOPS
                 datt = KOPS.decode_attention_paged
 
-            def fn(params, tokens, positions, cache, bt):
+            def fn(params, tokens, positions, cache, bt, qf):
                 cache = dict(cache, block_tables=bt)
+                if qf is not None:
+                    cache["quant_flags"] = qf
                 logits, cache = MDL.forward(
                     cfg, params, {"tokens": tokens, "positions": positions},
                     mode="decode", cache=cache, remat=False,
@@ -267,6 +297,105 @@ class InferenceEngine:
         return (2 * cfg.num_layers * self.page_size * cfg.num_kv_heads
                 * cfg.head_dim * itemsize)
 
+    def _page_bytes_quant(self) -> int:
+        """Logical bytes of a frozen int8 page (scales are negligible)."""
+        cfg = self.cfg
+        return (2 * cfg.num_layers * self.page_size * cfg.num_kv_heads
+                * cfg.head_dim)
+
+    def _note_kv(self) -> None:
+        """Fold the pool's current logical KV footprint into the running
+        peak: live pages at full precision, frozen pages at int8."""
+        a = self._alloc
+        if a is None:
+            return
+        nq = 0
+        if self._quant_flags is not None:
+            nq = int(np.sum((self._quant_flags[:a.num_pages] > 0)
+                            & (a._ref[:a.num_pages] > 0)))
+        cur = (a.in_use - nq) * self._page_bytes() \
+            + nq * self._page_bytes_quant()
+        self.kv_peak_bytes = max(self.kv_peak_bytes, cur)
+
+    # page lifecycle wrappers: every allocation flows through here so quant
+    # flags are reset on reuse and the kv-bytes peak is tracked in one place
+    def alloc_pages(self, n: int) -> List[int]:
+        ids = self._alloc.alloc(n)
+        if self._quant_flags is not None and ids:
+            self._quant_flags[np.asarray(ids, np.int64)] = 0
+        self._note_kv()
+        return ids
+
+    def retain_pages(self, ids: Sequence[int]) -> None:
+        self._alloc.retain(ids)
+
+    def release_pages(self, ids: Sequence[int]) -> None:
+        self._alloc.release(ids)
+
+    def copy_pages(self, srcs: Sequence[int], dsts: Sequence[int]) -> None:
+        """Copy-on-write privatization: batched device copy of fp pages
+        (COW sources are live, never-quantized pages by construction)."""
+        if not srcs:
+            return
+        s = jnp.asarray(srcs, jnp.int32)
+        d = jnp.asarray(dsts, jnp.int32)
+        for kk in ("k", "v"):
+            self._pool[kk] = self._pool[kk].at[:, :, d].set(
+                self._pool[kk][:, :, s])
+
+    def _quantize_pages(self, pages: Sequence[int]) -> None:
+        """Quantize-on-commit: symmetric per-(layer, kv-head, page) int8
+        with scale = abs-max / 127, written to the shadow pool.  Only ever
+        called for freshly tree-committed (frozen) pages; the fp copy stays
+        authoritative until the flag flips, and flags are host state so the
+        very next device step reads the quantized form."""
+        if not pages:
+            return
+        n = 1                       # pow-2 pad (repeat id 0 — idempotent)
+        while n < len(pages):
+            n *= 2
+        padded = list(pages) + [pages[0]] * (n - len(pages))
+        pg = jnp.asarray(padded, jnp.int32)
+        for kk, qk, sk in (("k", "kq", "kscale"), ("v", "vq", "vscale")):
+            src = self._pool[kk][:, :, pg].astype(jnp.float32)
+            amax = jnp.max(jnp.abs(src), axis=(3, 4))      # (ln, kv, n)
+            scale = jnp.maximum(amax, 1e-8) / 127.0
+            qv = jnp.clip(jnp.round(src / scale[..., None, None]),
+                          -127, 127).astype(jnp.int8)
+            self._pool[qk] = self._pool[qk].at[:, :, pg].set(qv)
+            self._pool[sk] = self._pool[sk].at[:, :, pg].set(scale)
+        self._quant_flags[np.asarray(pages, np.int64)] = 1
+        self._note_kv()
+
+    # ------------------------------ radix cache --------------------------------
+    def radix_match(self, ids: Sequence[int], stats: GenStats,
+                    limit: Optional[int] = None) -> Tuple[List[int], int]:
+        """Deepest page-aligned prefix of `ids` resident in the radix tree.
+        Returned pages are retained for the caller (release when done)."""
+        if self._radix is None:
+            return [], 0
+        pages, n = self._radix.match(ids, limit=limit)
+        if n:
+            stats.prefix_hits += 1
+            stats.radix_hit_tokens += n
+        return pages, n
+
+    def radix_insert(self, ids: Sequence[int], pages: Sequence[int]
+                     ) -> List[int]:
+        """Commit the full-page span of `ids` (backed by `pages`) to the
+        radix tree; newly adopted pages are frozen and, in int8 mode,
+        quantized on the spot."""
+        if self._radix is None:
+            return []
+        nfull = len(ids) // self.page_size
+        if nfull == 0:
+            return []
+        adopted = self._radix.insert(
+            list(ids[:nfull * self.page_size]), list(pages[:nfull]))
+        if adopted and self.kv_quant == "int8":
+            self._quantize_pages(adopted)
+        return adopted
+
     def _dense_cache_bytes(self, cache: dict) -> int:
         return int(cache["k"].size * cache["k"].dtype.itemsize
                    + cache["v"].size * cache["v"].dtype.itemsize) \
@@ -278,15 +407,23 @@ class InferenceEngine:
         arrays — unless the operator pinned `page_pool_pages`, in which
         case the pool is a hard memory bound and False is returned when the
         demand cannot fit (callers wait for slot frees or raise)."""
+        quant = self.kv_quant == "int8"
         if self._pool is None:
             n = self.page_pool_pages or \
                 max(2 * need_pages, 2 * self.num_table_blocks)
             n = max(n, 1)
             if self.page_pool_pages is None:
                 n = max(n, need_pages)
-            full = MDL.init_paged_cache(self.cfg, n, self.page_size)
-            self._pool = {"k": full["k"], "v": full["v"]}
+            full = MDL.init_paged_cache(self.cfg, n, self.page_size,
+                                        quant=quant)
+            keys = ("k", "v") + (("kq", "vq", "kscale", "vscale")
+                                 if quant else ())
+            self._pool = {kk: full[kk] for kk in keys}
             self._alloc = PageAllocator(n)
+            if quant:
+                self._quant_flags = np.zeros(n, np.int8)
+            if self.prefix_cache_mode == "radix":
+                self._radix = RadixPrefixCache(self._alloc, self.page_size)
             return self._alloc.free_pages >= need_pages
         a = self._alloc
         if a.free_pages >= need_pages:
@@ -302,16 +439,23 @@ class InferenceEngine:
                     all(a.refs(p) == 1 for p in ent.pages):
                 a.release(ent.pages)
                 ent.pages = None
+        if a.free_pages < need_pages and self._radix is not None:
+            # radix eviction: LRU leaf nodes with no outside readers
+            self._radix.evict(need_pages - a.free_pages)
         if a.free_pages >= need_pages:
             return True
         if self.page_pool_pages is not None:
             return False                       # pinned pool: hard bound
         extra = max(need_pages - a.free_pages, a.num_pages // 2)
-        for kk in ("k", "v"):
+        for kk in self._pool:
             pool = self._pool[kk]
-            pad = jnp.zeros(pool.shape[:1] + (extra,) + pool.shape[2:],
+            # page axis of the folded (ln, KV, P, ...) layout
+            pad = jnp.zeros(pool.shape[:2] + (extra,) + pool.shape[3:],
                             pool.dtype)
-            self._pool[kk] = jnp.concatenate([pool, pad], axis=1)
+            self._pool[kk] = jnp.concatenate([pool, pad], axis=2)
+        if self._quant_flags is not None:
+            self._quant_flags = np.concatenate(
+                [self._quant_flags, np.zeros(extra, np.int8)])
         a.grow(extra)
         return True
 
@@ -402,20 +546,27 @@ class InferenceEngine:
             return [], 0, ids
         ent = self._prefix_entry_for(prefix_text, stats)
         if ent.pages is None:
-            pages = self._alloc.alloc(npre)
+            pages = self.alloc_pages(npre)
             cfg = self.cfg
             k1 = jnp.asarray(ent.host_kv["k"])        # (ln, 1, lc, kv, hd)
             v1 = jnp.asarray(ent.host_kv["v"])
             # prefill wrote the bucketed sequence at slots 0..off-1 with the
             # left padding first: token t lives at slot (off - len) + t
             pad = ent.off - len(ids)
+            dp = MDL.padded_head_dim(cfg.head_dim)
             shp = (cfg.num_layers, npre, ps, cfg.num_kv_heads, cfg.head_dim)
-            ksrc = k1[:, 0, pad:pad + n_share].reshape(shp)
-            vsrc = v1[:, 0, pad:pad + n_share].reshape(shp)
+
+            def fold(src):
+                # (ln, npre, ps, kv, hd) → (ln, kv, npre, ps, Dp)
+                src = src.reshape(shp).transpose(0, 3, 1, 2, 4)
+                return jnp.pad(src, [(0, 0)] * 4
+                               + [(0, dp - cfg.head_dim)])
+            ksrc = fold(k1[:, 0, pad:pad + n_share])
+            vsrc = fold(v1[:, 0, pad:pad + n_share])
             pg = jnp.asarray(pages, jnp.int32)
-            self._pool["k"] = self._pool["k"].at[:, pg].set(
+            self._pool["k"] = self._pool["k"].at[:, :, pg].set(
                 ksrc.astype(self._pool["k"].dtype))
-            self._pool["v"] = self._pool["v"].at[:, pg].set(
+            self._pool["v"] = self._pool["v"].at[:, :, pg].set(
                 vsrc.astype(self._pool["v"].dtype))
             ent.pages = pages
         return list(ent.pages), n_share, ids[n_share:]
@@ -439,31 +590,36 @@ class InferenceEngine:
             pos[i] = np.arange(L) - pad + prefix_len
             pos[i, :pad] = -1
         npre = len(prefix_pages)
-        cache = {"idx": jnp.int32(0),
-                 "k": self._pool["k"], "v": self._pool["v"]}
+        cache = dict(self._pool, idx=jnp.int32(0))
         if extra:
             cache.update(extra)
         key = ("paged", B, L, table_rows.shape[1], npre)
         if key not in self._prefill_cache:
             cfg = self.cfg
 
-            # block table / prefix table ride OUTSIDE the donated cache:
-            # they are rebuilt host-side every call, donation buys nothing
-            def fn(params, tokens, positions, cache, bt, ptab, plen):
+            # block table / prefix table / quant flags ride OUTSIDE the
+            # donated cache: they are rebuilt host-side every call,
+            # donation buys nothing
+            def fn(params, tokens, positions, cache, bt, ptab, plen, qf):
                 cache = dict(cache, block_tables=bt, prefix_table=ptab,
                              prefix_len=plen)
+                if qf is not None:
+                    cache["quant_flags"] = qf
                 logits, cache = MDL.forward(
                     cfg, params, {"tokens": tokens, "positions": positions},
                     mode="prefill", cache=cache, remat=False, last_only=True)
                 return logits[:, -1], cache
 
             self._prefill_cache[key] = jax.jit(fn, donate_argnums=(3,))
+        qf = None if self._quant_flags is None \
+            else jnp.asarray(self._quant_flags)
         logits, out = self._prefill_cache[key](
             self.params, jnp.asarray(toks), jnp.asarray(pos), cache,
             jnp.asarray(np.ascontiguousarray(table_rows)),
             jnp.asarray(np.asarray(prefix_pages, np.int32).reshape(npre)),
-            jnp.int32(prefix_len))
-        self._pool["k"], self._pool["v"] = out["k"], out["v"]
+            jnp.int32(prefix_len), qf)
+        for kk in self._pool:
+            self._pool[kk] = out[kk]
         extra_out = {k: out[k] for k in ("conv", "h") if k in out}
         lens = np.array([prefix_len + len(t) for t in token_lists], np.int32)
         return np.asarray(logits, np.float32), lens, B * L, extra_out
@@ -474,15 +630,18 @@ class InferenceEngine:
         host block table (B, NB_full); only its first `num_blocks` columns
         (the batch's actual fill, bucketed by the caller) reach the device,
         so attention work scales with occupancy, not max_len."""
-        cache = {"idx": jnp.int32(0),
-                 "k": self._pool["k"], "v": self._pool["v"]}
+        cache = dict(self._pool, idx=jnp.int32(0))
         if extra:
             cache.update(extra)
         dec = self._decode_fn_paged(num_blocks)
+        qf = None if self._quant_flags is None \
+            else jnp.asarray(self._quant_flags)
         lg, out = dec(self.params, jnp.asarray(toks[:, None]),
                       jnp.asarray(positions[:, None]), cache,
-                      jnp.asarray(np.ascontiguousarray(table[:, :num_blocks])))
-        self._pool["k"], self._pool["v"] = out["k"], out["v"]
+                      jnp.asarray(np.ascontiguousarray(table[:, :num_blocks])),
+                      qf)
+        for kk in self._pool:
+            self._pool[kk] = out[kk]
         extra_out = {k: out[k] for k in ("conv", "h") if k in out}
         return np.asarray(lg, np.float32), extra_out
 
@@ -582,8 +741,12 @@ class InferenceEngine:
                         temperature, shared_prefix, stats: GenStats
                         ) -> List[str]:
         """Paged-layout generate: per-row block tables over the global page
-        pool; a shared prefix contributes the SAME page ids to every row's
-        table (zero-copy sharing)."""
+        pool.  prefix_cache_mode="exact": a shared prefix resolves through
+        the exact-string memo and contributes the SAME page ids to every
+        row's table.  "radix": the batch-common token prefix is matched
+        against the radix tree (discovering partial overlap with ANY prior
+        prompt), suffix prefill starts at the deepest matched page, and the
+        rows' full prompt pages are committed back to the tree."""
         B = len(prompts)
         ps = self.page_size
         NBf = self.num_table_blocks
@@ -591,18 +754,59 @@ class InferenceEngine:
 
         pages_pre: List[int] = []
         n_share = 0
-        tail: List[int] = []
-        if shared_prefix:
+        if self.prefix_cache_mode == "radix":
+            self._ensure_pool(0)               # materialize pool + tree
+            token_lists = [TOK.encode(shared_prefix + p) if shared_prefix
+                           else TOK.encode(p) for p in prompts]
+            if shared_prefix:
+                stats.input_tokens += TOK.count_tokens(shared_prefix)
+                npre_tok = len(TOK.encode(shared_prefix))
+            else:
+                npre_tok = 0
+            stats.input_tokens += sum(len(t) - npre_tok for t in token_lists)
+            # batch-common token prefix, leaving >= 1 suffix token per row
+            common = list(token_lists[0])
+            for t in token_lists[1:]:
+                n = 0
+                while n < len(common) and n < len(t) and common[n] == t[n]:
+                    n += 1
+                common = common[:n]
+            aligned = min(len(common), min(len(t) for t in token_lists) - 1)
+            aligned = (aligned // ps) * ps
+            pages_pre, n_share = self.radix_match(common, stats,
+                                                  limit=aligned)
+            if B >= 2 and n_share < aligned and \
+                    self._ensure_pool((aligned - n_share) // ps):
+                # seed prefill: materialize the still-missing span of the
+                # batch-common prefix ONCE (batch=1) and commit it, so the
+                # per-row prefills below all start at `aligned`
+                seed = self.alloc_pages((aligned - n_share) // ps)
+                st = np.full((1, NBf), -1, np.int32)
+                st[0, :n_share // ps] = pages_pre
+                st[0, n_share // ps:aligned // ps] = seed
+                _, _, pre, _ = self.paged_prefill(
+                    [common[n_share:aligned]], st, pages_pre, n_share,
+                    extra=self._ssm_state(1))
+                stats.prefill_tokens += pre
+                self.radix_insert(common[:aligned],
+                                  list(st[0, :aligned // ps]))
+                pages_pre = pages_pre + seed   # run holds one ref on each
+                n_share = aligned
+            token_lists = [t[n_share:] for t in token_lists]
+        elif shared_prefix:
             pages_pre, n_share, tail = self.prefix_pages_for(
                 shared_prefix, stats)
             stats.input_tokens += TOK.count_tokens(shared_prefix)
-        token_lists = [tail + TOK.encode(p, bos=not shared_prefix)
-                       for p in prompts]
-        stats.input_tokens += sum(len(t) - len(tail) for t in token_lists)
+            token_lists = [tail + TOK.encode(p, bos=False) for p in prompts]
+            stats.input_tokens += sum(len(t) - len(tail)
+                                      for t in token_lists)
+            if self._alloc is not None and pages_pre:
+                self.retain_pages(pages_pre)   # survive memo eviction
+        else:
+            token_lists = [TOK.encode(p) for p in prompts]
+            stats.input_tokens += sum(len(t) for t in token_lists)
 
         npre = len(pages_pre)
-        if self._alloc is not None and pages_pre:
-            self._alloc.retain(pages_pre)      # survive memo eviction mid-call
         table = np.full((B, NBf), -1, np.int32)
         if npre:
             table[:, :npre] = pages_pre        # shared: same ids every row
@@ -616,7 +820,7 @@ class InferenceEngine:
                     f"page pool ({self.page_pool_pages} pages) too small "
                     f"for batch of {B} rows")
             for i, need in enumerate(need_each):
-                ids = self._alloc.alloc(need)
+                ids = self.alloc_pages(need)
                 owned.append(ids)
                 table[i, npre:npre + need] = ids
 
@@ -624,6 +828,16 @@ class InferenceEngine:
             logits, lens, pre, extra = self.paged_prefill(
                 token_lists, table, pages_pre, n_share, extra=extra)
             stats.prefill_tokens += pre
+            if self.prefix_cache_mode == "radix":
+                # commit every row's full-page prompt span (clamped to the
+                # pages actually allocated when the row is capacity-bound);
+                # identical or overlapping rows dedup inside the tree
+                for i, t in enumerate(token_lists):
+                    nfull = min((n_share + len(t)) // ps,
+                                npre + need_each[i])
+                    if nfull > npre:
+                        self.radix_insert((common[:n_share] + t)[:nfull * ps],
+                                          list(table[i, :nfull]))
 
             out_tokens: List[List[int]] = [[] for _ in range(B)]
             done = np.zeros(B, bool)
@@ -643,10 +857,11 @@ class InferenceEngine:
             # errors must not leak refcounts: a pinned pool would shrink
             # permanently
             for ids in owned:
-                self._alloc.release(ids)
+                self.release_pages(ids)
             if pages_pre:
-                self._alloc.release(pages_pre)
-        stats.kv_bytes = self._alloc.peak_in_use * self._page_bytes()
+                self.release_pages(pages_pre)
+        self._note_kv()
+        stats.kv_bytes = self.kv_peak_bytes
         return [TOK.decode(t) for t in out_tokens]
 
     # ------------------------------- sampling ---------------------------------

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import Counter
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -39,10 +40,84 @@ class Request:
     prompt: str
     grammar: Optional[JsonGrammar] = None
     max_new_tokens: int = 256
-    rid: int = -1
+    n_samples: int = 1          # >1 ⇒ self-consistency: decode n streams,
+    rid: int = -1               #      majority-vote the final text
     # filled on completion:
     text: Optional[str] = None
     error: Optional[str] = None
+    samples: Optional[List[str]] = None   # per-stream texts when n_samples>1
+
+
+class _Job:
+    """One decode stream: a (request, sample-index) pair.
+
+    Duck-types the Request fields the slot machinery reads (prompt, grammar,
+    max_new_tokens) but carries its own text/error so n_samples streams of
+    one request complete independently.  ``group`` ties sibling streams to a
+    shared-prefill fork snapshot in the paged layout."""
+    __slots__ = ("req", "sample", "group", "rid", "text", "error")
+
+    def __init__(self, req: Request, sample: int,
+                 group: Optional["_ForkGroup"] = None):
+        self.req = req
+        self.sample = sample
+        self.group = group
+        self.rid = req.rid
+        self.text: Optional[str] = None
+        self.error: Optional[str] = None
+
+    @property
+    def prompt(self) -> str:
+        return self.req.prompt
+
+    @property
+    def grammar(self) -> Optional[JsonGrammar]:
+        return self.req.grammar
+
+    @property
+    def max_new_tokens(self) -> int:
+        return self.req.max_new_tokens
+
+
+class _ForkGroup:
+    """Copy-on-write fork point for one request's n_samples streams (paged
+    layout).  The first stream to fill a slot prefills normally; right after
+    its prefill we snapshot the block-table row, position, last-token logits
+    and SSM state, and retain every page covering the prompt.  Sibling
+    streams then "fork": they reference the same shared pages zero-copy and
+    only allocate fresh pages for their own decode capacity — no prefill.
+    Shared pages privatize lazily via the decode-loop COW guard on first
+    write (which covers the sub-page tail every stream writes into)."""
+
+    def __init__(self, fills_left: int):
+        self.fills_left = fills_left   # siblings still waiting to fork
+        self.snapshot: Optional[dict] = None
+        self.retained: List[int] = []  # group's own leases on shared pages
+
+    def snap(self, eng, row: np.ndarray, pos: int, logits_row: np.ndarray,
+             extra_slice: Optional[dict]) -> None:
+        nsh = -(-int(pos) // eng.page_size)      # pages covering the prompt
+        shared = [int(p) for p in row[:nsh] if p >= 0]
+        eng.retain_pages(shared)
+        self.retained = shared
+        self.snapshot = {"row": row[:nsh].copy(), "nsh": nsh, "pos": int(pos),
+                         "logits": logits_row.copy(), "extra": extra_slice}
+
+    def done_fill(self, eng) -> None:
+        self.fills_left -= 1
+        if self.fills_left <= 0:
+            self.release(eng)
+
+    def release(self, eng) -> None:
+        if self.retained:
+            eng.release_pages(self.retained)
+            self.retained = []
+
+
+def _vote(texts: Sequence[str]) -> str:
+    """Majority text; ties break toward the earliest stream (Counter's
+    most_common is insertion-stable)."""
+    return Counter(texts).most_common(1)[0][0]
 
 
 class ContinuousBatcher:
@@ -60,16 +135,43 @@ class ContinuousBatcher:
         st = GenStats(calls=1)
         t0 = time.time()
         reqs = list(requests)
+        paged = self.engine.kv_layout == "paged"
+        jobs: List[_Job] = []
         for i, r in enumerate(reqs):
             r.rid = i
-        if self.engine.kv_layout == "paged":
-            self._run_paged(reqs, temperature, shared_prefix, st)
+            ns = max(1, r.n_samples)
+            grp = _ForkGroup(ns - 1) if (ns > 1 and paged) else None
+            jobs.extend(_Job(r, k, grp) for k in range(ns))
+        if paged:
+            self._run_paged(jobs, temperature, shared_prefix, st)
         else:
-            self._run_dense(reqs, temperature, shared_prefix, st)
+            self._run_dense(jobs, temperature, shared_prefix, st)
+        self._reduce(reqs, jobs)
         st.wall_s = time.time() - t0
         self.stats.add(st)
         self.engine.total.add(st)
         return reqs
+
+    @staticmethod
+    def _reduce(reqs: List[Request], jobs: List[_Job]) -> None:
+        """Fold per-stream results back onto their requests: single-stream
+        requests copy through; multi-sample requests keep every stream in
+        `samples` and majority-vote the final text (self-consistency)."""
+        by_req: Dict[int, List[_Job]] = {}
+        for j in jobs:
+            by_req.setdefault(j.rid, []).append(j)
+        for r in reqs:
+            js = sorted(by_req[r.rid], key=lambda j: j.sample)
+            if len(js) == 1:
+                r.text, r.error = js[0].text, js[0].error
+                continue
+            r.samples = [j.text for j in js]
+            ok = [j.text for j in js if j.error is None and j.text is not None]
+            if ok:
+                r.text = _vote(ok)
+                r.error = None
+            else:
+                r.text, r.error = js[0].text, js[0].error
 
     # ---------------------------- per-tick advance ----------------------------
     @staticmethod
@@ -106,7 +208,7 @@ class ContinuousBatcher:
         return done
 
     # ------------------------------- dense ------------------------------------
-    def _run_dense(self, reqs: List[Request], temperature: float,
+    def _run_dense(self, reqs: List[_Job], temperature: float,
                    shared_prefix: str, st: GenStats) -> None:
         eng = self.engine
         queue = list(reqs)
@@ -180,7 +282,7 @@ class ContinuousBatcher:
         st.decode_steps += ticks
 
     # ------------------------------- paged ------------------------------------
-    def _run_paged(self, reqs: List[Request], temperature: float,
+    def _run_paged(self, reqs: List[_Job], temperature: float,
                    shared_prefix: str, st: GenStats) -> None:
         eng = self.engine
         ps = eng.page_size
@@ -188,19 +290,25 @@ class ContinuousBatcher:
         cap = NBf * ps
         B = self.num_slots
         queue = list(reqs)
+        radix = eng.prefix_cache_mode == "radix"
+        groups = {id(j.group): j.group for j in reqs if j.group is not None}
 
         pages_pre: List[int] = []
         n_share = 0
         tail: List[int] = []
-        if shared_prefix:
+        if shared_prefix and not radix:
+            # exact mode: resolve the prefix once up front.  radix mode
+            # skips this — the first fill commits the prefix pages to the
+            # tree and every later fill discovers them at match time.
             pages_pre, n_share, tail = eng.prefix_pages_for(shared_prefix, st)
             if pages_pre:
-                eng._alloc.retain(pages_pre)
+                eng.retain_pages(pages_pre)
         npre = len(pages_pre)
 
         table = np.full((B, NBf), -1, np.int32)
-        slot_pages: List[List[int]] = [[] for _ in range(B)]
-        active: List[Optional[Request]] = [None] * B
+        slot_pages: List[List[int]] = [[] for _ in range(B)]   # owned (alloc)
+        slot_shared: List[List[int]] = [[] for _ in range(B)]  # leased (retain)
+        active: List[Optional[_Job]] = [None] * B
         states = [None] * B
         outs: List[List[int]] = [[] for _ in range(B)]
         budgets = np.zeros(B, np.int64)
@@ -208,43 +316,131 @@ class ContinuousBatcher:
         logits = np.full((B, eng.cfg.padded_vocab), NEG_INF, np.float32)
         extra = eng._ssm_state(B) or None
 
-        def fill_slot(b: int, req: Request) -> bool:
+        def place(b: int, job: _Job, pos: int, lg_row: np.ndarray) -> None:
+            active[b] = job
+            states[b] = job.grammar.init_state() if job.grammar else None
+            outs[b] = []
+            budgets[b] = job.max_new_tokens
+            positions[b] = pos
+            logits[b] = lg_row[: logits.shape[1]]
+
+        def fill_fork(b: int, job: _Job, grp: _ForkGroup) -> bool:
+            """Fork a sibling stream off the group snapshot: share every
+            page covering the prompt zero-copy, allocate only fresh decode
+            capacity, skip prefill entirely."""
+            nonlocal extra
+            sn = grp.snapshot
+            nsh, pos = sn["nsh"], sn["pos"]
+            tot = min(pos + job.max_new_tokens, cap)
+            need = max(0, -(-tot // ps) - nsh)
+            if not eng._ensure_pool(need):
+                return False
+            pg = eng.alloc_pages(need)
+            shared = [int(p) for p in sn["row"] if p >= 0]
+            eng.retain_pages(shared)
+            slot_pages[b] = pg
+            slot_shared[b] = shared
+            table[b, :nsh] = sn["row"]
+            table[b, nsh:nsh + need] = pg
+            table[b, nsh + need:] = -1
+            if extra and sn["extra"]:
+                extra = {k: extra[k].at[:, b:b + 1].set(sn["extra"][k])
+                         for k in extra}
+            st.input_tokens += pos
+            place(b, job, pos, sn["logits"])
+            grp.done_fill(eng)
+            return True
+
+        def fill_slot(b: int, job: _Job) -> bool:
             """Allocate pages + prefill the slot. False ⇒ the (pinned) pool
             cannot take the request right now — it stays queued until other
             slots free pages."""
             nonlocal extra
-            ids = tail + TOK.encode(req.prompt, bos=not shared_prefix)
-            tot = min(n_share + len(ids) + req.max_new_tokens, cap)
-            need = max(0, -(-tot // ps) - npre)
+            grp = job.group
+            if grp is not None and grp.snapshot is not None:
+                return fill_fork(b, job, grp)
+            if radix:
+                ids = TOK.encode(shared_prefix + job.prompt)
+                pre_pages, pre_len = eng.radix_match(ids, st)
+                suffix = ids[pre_len:]
+            else:
+                ids = tail + TOK.encode(job.prompt, bos=not shared_prefix)
+                pre_pages, pre_len = pages_pre, n_share
+                suffix = ids
+            nfixed = len(pre_pages)
+            tot = min(pre_len + len(suffix) + job.max_new_tokens, cap)
+            need = max(0, -(-tot // ps) - nfixed)
             if not eng._ensure_pool(need):
+                if radix and pre_pages:
+                    eng.release_pages(pre_pages)
                 return False
-            pg = eng._alloc.alloc(need)
+            pg = eng.alloc_pages(need)
             slot_pages[b] = pg
-            if npre:
-                table[b, :npre] = pages_pre
-            table[b, npre:npre + need] = pg
-            table[b, npre + need:] = -1
+            if radix:
+                slot_shared[b] = pre_pages
+            if nfixed:
+                table[b, :nfixed] = pre_pages
+            table[b, nfixed:nfixed + need] = pg
+            table[b, nfixed + need:] = -1
             slot_extra = {k: v[:, b:b + 1] for k, v in (extra or {}).items()} \
                 or None
             lg, lens, pre, ex1 = eng.paged_prefill(
-                [ids], table[b:b + 1], pages_pre, n_share, extra=slot_extra)
+                [suffix], table[b:b + 1], pre_pages, pre_len,
+                extra=slot_extra)
             if extra:
                 extra = {k: extra[k].at[:, b:b + 1].set(ex1[k])
                          for k in extra}
+            if radix:
+                # commit the full-page span of the prompt so later fills
+                # (and later runs) reuse it at match time
+                nfull = min(len(ids) // ps, nfixed + need)
+                if nfull > pre_len // ps:
+                    eng.radix_insert(ids[: nfull * ps],
+                                     [int(p) for p in table[b, :nfull]])
             st.prefill_tokens += pre
-            st.input_tokens += n_share + len(ids)
-            active[b] = req
-            states[b] = req.grammar.init_state() if req.grammar else None
-            outs[b] = []
-            budgets[b] = req.max_new_tokens
-            positions[b] = lens[0]
-            logits[b] = lg[0][:logits.shape[1]]
+            st.input_tokens += pre_len + len(suffix)
+            place(b, job, int(lens[0]), lg[0])
+            if grp is not None:
+                sl = {k: extra[k][:, b:b + 1] for k in (extra or {})} or None
+                grp.snap(eng, table[b], positions[b], logits[b], sl)
             return True
 
         def free_slot(b: int) -> None:
-            eng._alloc.release(slot_pages[b])
+            eng.release_pages(slot_pages[b])
             slot_pages[b] = []
+            if slot_shared[b]:
+                eng.release_pages(slot_shared[b])
+                slot_shared[b] = []
             table[b, :] = -1           # dead rows must never write pages
+
+        def cow_guard(live: List[int]) -> None:
+            """Privatize this tick's write page for any slot that shares it
+            (refcount > 1): fork streams share the sub-page prompt tail, so
+            the first decode write of each stream must land on a private
+            copy.  Batched into one device copy per tick."""
+            srcs: List[int] = []
+            dsts: List[int] = []
+            for b in live:
+                w = int(positions[b]) // ps
+                if w >= NBf:
+                    continue
+                pgid = int(table[b, w])
+                if pgid < 0 or eng._alloc.refs(pgid) <= 1:
+                    continue
+                if not eng._ensure_pool(1):
+                    raise RuntimeError(
+                        "page pool exhausted during copy-on-write")
+                new = eng.alloc_pages(1)[0]
+                srcs.append(pgid)
+                dsts.append(new)
+                table[b, w] = new
+                slot_pages[b].append(new)
+                # the lease on the old page stays in slot_shared/slot_pages
+                # and is released at free_slot — release here would race
+                # siblings still reading it
+            if srcs:
+                eng.copy_pages(srcs, dsts)
+                st.cow_copies += len(srcs)
 
         done_count = 0
         ticks = 0
@@ -277,6 +473,7 @@ class ContinuousBatcher:
                 live = [b for b in range(B) if active[b] is not None]
                 if not live:
                     continue           # all finished this tick; refill next
+                cow_guard(live)
                 nb = eng.active_blocks(positions[live])
                 lgn, extra_out = eng.paged_decode(toks, positions, table, nb,
                                                   extra=extra)
@@ -288,14 +485,19 @@ class ContinuousBatcher:
                 positions += 1
                 ticks += 1
         finally:
-            # errors must not leak slot pages or the prefix retain: a
-            # pinned pool would shrink permanently
+            # errors must not leak slot pages, fork-group leases, or the
+            # prefix retain: a pinned pool would shrink permanently
             for b in range(B):
                 if slot_pages[b]:
-                    eng._alloc.release(slot_pages[b])
+                    eng.release_pages(slot_pages[b])
                     slot_pages[b] = []
+                if slot_shared[b]:
+                    eng.release_pages(slot_shared[b])
+                    slot_shared[b] = []
+            for g in groups.values():
+                g.release(eng)
             if pages_pre:
-                eng._alloc.release(pages_pre)
+                eng.release_pages(pages_pre)
         st.decode_steps += ticks
-        if eng._alloc is not None:
-            st.kv_bytes = eng._alloc.peak_in_use * eng._page_bytes()
+        eng._note_kv()
+        st.kv_bytes = eng.kv_peak_bytes

@@ -73,19 +73,19 @@ def test_decode_attention(B, H, KV, D, L, fill, dtype):
 
 
 # --------------------------- paged decode attention ---------------------------
-@pytest.mark.parametrize("B,H,KV,D,ps,NB,P", [
-    (2, 4, 2, 32, 16, 4, 12), (1, 8, 1, 64, 32, 2, 6),
-    (3, 4, 4, 80, 8, 8, 32),            # pads D to 128
-])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_decode_attention_paged(B, H, KV, D, ps, NB, P, dtype):
-    """Block-table Pallas kernel vs the gather-based jnp oracle, ragged
-    fills (some rows one block, some full)."""
-    ks = _split(3)
-    q = jax.random.normal(ks[0], (B, H, D), dtype)
-    kp = jax.random.normal(ks[1], (P, ps, KV, D), dtype)
-    vp = jax.random.normal(ks[2], (P, ps, KV, D), dtype)
-    rng = np.random.default_rng(B * 7 + NB)
+def _folded_pools(key, KV, P, ps, D, dtype):
+    """Random pool in the pre-folded TPU-native layout (KV, P, ps, Dp) —
+    data in the first D lanes, zero lane padding — plus the unpadded
+    (KV·P, ps, D) view the oracle consumes."""
+    from repro.models.model import padded_head_dim
+    Dp = padded_head_dim(D)
+    raw = jax.random.normal(key, (KV, P, ps, D), dtype)
+    pool = jnp.pad(raw, ((0, 0), (0, 0), (0, 0), (0, Dp - D)))
+    return pool, raw.reshape(KV * P, ps, D)
+
+
+def _ragged_tables(B, KV, P, ps, NB, seed):
+    rng = np.random.default_rng(seed)
     fills = [int(rng.integers(1, NB * ps + 1)) for _ in range(B)]
     bt = np.full((B, NB), -1, np.int32)
     perm = iter(rng.permutation(P))
@@ -94,23 +94,87 @@ def test_decode_attention_paged(B, H, KV, D, ps, NB, P, dtype):
             bt[b, j] = next(perm)
     bt = jnp.asarray(bt)
     qpos = jnp.asarray([f - 1 for f in fills], jnp.int32)
-
-    out = ops.decode_attention_paged(q, kp, vp, bt, qpos, interpret=True)
-
-    G = H // KV
-    qr = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
-    kf = kp.transpose(2, 0, 1, 3).reshape(KV * P, ps, D)
-    vf = vp.transpose(2, 0, 1, 3).reshape(KV * P, ps, D)
     nact = jnp.asarray([(f - 1) // ps + 1 for f in fills], jnp.int32)
     btf = (jnp.clip(bt, 0, P - 1)[:, None, :]
            + jnp.arange(KV)[None, :, None] * P).reshape(B * KV, NB)
-    r = ref.decode_attention_paged_ref(
-        qr, kf, vf, btf, jnp.repeat(nact, KV),
-        jnp.repeat(qpos[:, None], KV, axis=0).reshape(B * KV, 1))
+    return bt, qpos, jnp.repeat(nact, KV), btf, \
+        jnp.repeat(qpos[:, None], KV, axis=0).reshape(B * KV, 1)
+
+
+@pytest.mark.parametrize("B,H,KV,D,ps,NB,P", [
+    (2, 4, 2, 32, 16, 4, 12), (1, 8, 1, 64, 32, 2, 6),
+    (3, 4, 4, 80, 8, 8, 32),            # pads D to 128
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_paged(B, H, KV, D, ps, NB, P, dtype):
+    """Block-table Pallas kernel on the pre-folded (KV, P, ps, Dp) pool vs
+    the gather-based jnp oracle, ragged fills (some rows one block, some
+    full)."""
+    ks = _split(3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kp, kf = _folded_pools(ks[1], KV, P, ps, D, dtype)
+    vp, vf = _folded_pools(ks[2], KV, P, ps, D, dtype)
+    bt, qpos, nactf, btf, qposf = _ragged_tables(B, KV, P, ps, NB, B * 7 + NB)
+
+    out = ops.decode_attention_paged(q, kp, vp, bt, qpos, head_dim=D,
+                                     interpret=True)
+
+    G = H // KV
+    qr = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    r = ref.decode_attention_paged_ref(qr, kf, vf, btf, nactf, qposf)
     r = r.reshape(B, KV, G, D).reshape(B, H, D)
     tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,H,KV,D,ps,NB,P", [
+    (2, 4, 2, 32, 16, 4, 12), (3, 4, 4, 80, 8, 8, 32),
+])
+def test_decode_attention_paged_quant(B, H, KV, D, ps, NB, P):
+    """Dequantizing kernel twin vs the quant-aware oracle: half the pages
+    frozen into int8 shadows with per-page scales, half live in fp."""
+    from repro.models.model import padded_head_dim
+    Dp = padded_head_dim(D)
+    ks = _split(3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp, kf = _folded_pools(ks[1], KV, P, ps, D, jnp.float32)
+    vp, vf = _folded_pools(ks[2], KV, P, ps, D, jnp.float32)
+    bt, qpos, nactf, btf, qposf = _ragged_tables(B, KV, P, ps, NB, 11)
+
+    # freeze the even pages: per-(kv-head, page) scale over the page block
+    flags = jnp.asarray([1 - (p % 2) for p in range(P)], jnp.int32)
+
+    def quantize(pool):
+        amax = jnp.max(jnp.abs(pool), axis=(2, 3))          # (KV, P)
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        qv = jnp.clip(jnp.round(pool / scale[..., None, None]),
+                      -127, 127).astype(jnp.int8)
+        return qv, scale
+
+    kq, kscale = quantize(kp)
+    vq, vscale = quantize(vp)
+    quant = {"kq": kq, "vq": vq, "kscale": kscale, "vscale": vscale,
+             "flags": flags}
+    out = ops.decode_attention_paged(q, kp, vp, bt, qpos, head_dim=D,
+                                     quant=quant, interpret=True)
+
+    G = H // KV
+    qr = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    flf = jnp.tile(flags[None, :], (KV, 1)).reshape(KV * P, 1)
+    r = ref.decode_attention_paged_quant_ref(
+        qr, kf, vf, kq.reshape(KV * P, ps, Dp)[..., :D],
+        vq.reshape(KV * P, ps, Dp)[..., :D],
+        kscale.reshape(KV * P, 1), vscale.reshape(KV * P, 1),
+        flf, btf, nactf, qposf)
+    r = r.reshape(B, KV, G, D).reshape(B, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               atol=3e-5, rtol=3e-5)
+    # and the dequantized path stays within int8 drift of the fp oracle
+    rf = ref.decode_attention_paged_ref(qr, kf, vf, btf, nactf, qposf)
+    rf = rf.reshape(B, KV, G, D).reshape(B, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rf),
+                               atol=0.08, rtol=0.08)
 
 
 def test_decode_attention_paged_shared_prefix_pages():
@@ -121,15 +185,16 @@ def test_decode_attention_paged_shared_prefix_pages():
     P, NB = 8, 3
     ks = _split(3)
     q = jax.random.normal(ks[0], (B, H, D))
-    kp = jax.random.normal(ks[1], (P, ps, KV, D))
-    vp = jax.random.normal(ks[2], (P, ps, KV, D))
+    kp, _ = _folded_pools(ks[1], KV, P, ps, D, jnp.float32)
+    vp, _ = _folded_pools(ks[2], KV, P, ps, D, jnp.float32)
     # every row: shared pages [1, 2] + its own page (3 + b); fill = 20
     bt = jnp.asarray([[1, 2, 3 + b] for b in range(B)], jnp.int32)
     qpos = jnp.full((B,), 19, jnp.int32)
-    out = ops.decode_attention_paged(q, kp, vp, bt, qpos, interpret=True)
+    out = ops.decode_attention_paged(q, kp, vp, bt, qpos, head_dim=D,
+                                     interpret=True)
 
-    kd = kp[bt].reshape(B, NB * ps, KV, D)
-    vd = vp[bt].reshape(B, NB * ps, KV, D)
+    kd = kp[:, bt, :, :D].transpose(1, 2, 3, 0, 4).reshape(B, NB * ps, KV, D)
+    vd = vp[:, bt, :, :D].transpose(1, 2, 3, 0, 4).reshape(B, NB * ps, KV, D)
     spos = jnp.broadcast_to(jnp.arange(NB * ps, dtype=jnp.int32)[None],
                             (B, NB * ps))
     r = L.decode_attention(q, kd, vd, spos, qpos)

@@ -34,6 +34,21 @@ def _engine(layout, **kw):
     return InferenceEngine(_cfg(), kv_layout=layout, page_size=32, **kw)
 
 
+def _assert_refcount_baseline(eng):
+    """After a run completes, the only live page references are cache
+    residencies (prefix-memo entries and/or radix-tree nodes) with exactly
+    one reference each — anything else is a leaked slot/prefix lease."""
+    if eng._alloc is None:
+        return
+    resident = [p for e in eng._prefix_kv.values()
+                if e.pages is not None for p in e.pages]
+    if eng._radix is not None:
+        resident += eng._radix.resident_page_ids()
+    assert eng._alloc.in_use == len(resident), \
+        (eng._alloc.in_use, len(resident))
+    assert all(eng._alloc.refs(p) == 1 for p in resident)
+
+
 # ------------------------------ page allocator --------------------------------
 def test_page_allocator_alloc_free_refcount():
     a = PageAllocator(6)
@@ -41,6 +56,9 @@ def test_page_allocator_alloc_free_refcount():
     p2 = a.alloc(3)
     assert a.in_use == 5 and a.free_pages == 1
     assert a.peak_in_use == 5
+    # introspection aliases surfaced by EXPLAIN's pool line
+    assert a.resident_pages == a.in_use == 5
+    assert a.high_water == a.peak_in_use == 5
     a.retain(p1)                 # second reference (shared prefix)
     a.release(p1)
     assert a.in_use == 5         # still referenced
@@ -89,7 +107,8 @@ def test_prefix_memo_lru_cap_and_touch_on_get():
 
 
 def test_prefix_memo_eviction_releases_pages():
-    eng = _engine("paged", prefix_memo_entries=1)
+    # exact mode: this test pins the PR-5 whole-string memo semantics
+    eng = _engine("paged", prefix_memo_entries=1, prefix_cache_mode="exact")
     g = JsonGrammar([Field("x", "BOOLEAN")])
     eng.generate(["row"], grammar=g, shared_prefix=PREFIX, max_new_tokens=16)
     resident = eng._alloc.in_use
@@ -154,10 +173,8 @@ def test_batcher_paged_matches_dense(num_slots, with_prefix):
     assert 0 < sp.kv_bytes < sd.kv_bytes
     if with_prefix:
         assert sp.prefill_tokens < sd.prefill_tokens
-    # paged run must leave no leaked pages (prefix residency only)
-    resident = sum(len(e.pages) for e in p._prefix_kv.values()
-                   if e.pages is not None)
-    assert p._alloc.in_use == resident
+    # paged run must leave no leaked pages (cache residency only)
+    _assert_refcount_baseline(p)
 
 
 def test_batcher_paged_token_budget_eviction_frees_pages():
@@ -172,7 +189,10 @@ def test_batcher_paged_token_budget_eviction_frees_pages():
     for i in (0, 2, 3):
         assert done[i].error is None
         json.loads(done[i].text)
-    assert eng._alloc.in_use == 0      # eviction freed the slot's pages
+    # eviction freed the slot's pages (prompts are sub-page: nothing is
+    # committed to the radix tree, so the pool must drain to empty)
+    assert eng._alloc.in_use == 0
+    _assert_refcount_baseline(eng)
 
 
 def test_paged_pool_bound_stalls_but_completes():
@@ -187,6 +207,7 @@ def test_paged_pool_bound_stalls_but_completes():
     done = cb.run(reqs)
     assert all(r.text is not None for r in done)
     assert eng._alloc.num_pages == 16  # pinned: never grew
+    _assert_refcount_baseline(eng)
     # same requests through an unbounded engine decode identically
     ref = ContinuousBatcher(_engine("paged"), num_slots=4).run(
         [Request(prompt=f"n {i}", grammar=g, max_new_tokens=32)
@@ -217,6 +238,7 @@ def test_jax_executor_paged_common_prefix_split():
         outs[layout] = [r.text for r in res]
         if layout == "paged":
             assert sum(r.prefill_tokens for r in res) > 0
+            _assert_refcount_baseline(ex.engine)
     assert outs["dense"] == outs["paged"]
 
 
@@ -231,6 +253,8 @@ def test_jax_executor_paged_explicit_shared_prefix():
         res = ex.complete_many(suffixes, [("v", "INTEGER")], [1] * 4,
                                shared_prefix=PREFIX)
         outs[layout] = [(r.text, r.in_tokens) for r in res]
+        if layout == "paged":
+            _assert_refcount_baseline(ex.engine)
     assert outs["dense"] == outs["paged"]
 
 
@@ -285,6 +309,8 @@ def test_explain_dispatch_shows_kv_layout():
     assert "-- dispatch --" in out
     assert "kv_layout=paged" in out
     assert "prefix_hits=" in out and "prefill_tokens=" in out
+    assert "radix_hit_tokens=" in out and "kv_quant=" in out
+    assert "pool: 0/0 pages, hwm=0" in out   # oracle backend: no jax pool
     db.close()
 
 
