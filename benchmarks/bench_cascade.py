@@ -1,0 +1,133 @@
+"""Calibrated-cascade benchmark: a skewed semantic-predicate workload
+where a cheap proxy confidently resolves most rows and only a small
+uncertain band reaches the expensive model.
+
+Workload: one boolean semantic projection over a table whose proxy is
+right at confidence 0.95 on 7/8 of the rows and WRONG — but only at
+confidence 0.3 — on the rest.  Under a 0.95-precision contract the
+calibrated thresholds accept the confident band and escalate the rest,
+so the expensive backend sees ~12.5% of the rows plus deterministic
+audits.
+
+Systems:
+  direct       the expensive model answers every row (ground truth —
+               the oracle's error_rate is 0)
+  bootstrap    first cascade query on a cold store: escalate-everything,
+               full direct cost + proxy scoring, buys the held-out
+               agreement reservoir
+  calibrated   the same database queried over DISJOINT rows: thresholds
+               from the bootstrap evidence route only the uncertain band
+               to the expensive model
+
+The run asserts the acceptance criteria: the calibrated cascade's
+expensive calls are <= 0.5x the direct route's AND the measured
+precision (per-row agreement with direct) meets the declared contract.
+"""
+from repro.core.database import IPDB
+from repro.relational.table import Table
+
+
+def _mk(n):
+    return [{"a": i, "txt": f"case {i}"} for i in range(n)]
+
+
+def _i_of(row):
+    return int(str(row.get("txt", "0")).split()[-1])
+
+
+def truth(instruction, rows):
+    return [{"flag": _i_of(r) % 3 == 0} for r in rows]
+
+
+def proxy(instruction, rows):
+    """Wrong exactly where unconfident: i % 8 == 0 rows get a flipped
+    verdict at confidence 0.3, the rest are right at 0.95."""
+    out = []
+    for r in rows:
+        i = _i_of(r)
+        if i % 8 == 0:
+            out.append({"flag": i % 3 != 0, "__confidence__": 0.3})
+        else:
+            out.append({"flag": i % 3 == 0, "__confidence__": 0.95})
+    return out
+
+
+PROMPT = "screen {flag BOOLEAN} of {{txt}}"
+WITH = "WITH (cascade_proxy=small, cascade_target_precision=0.95)"
+
+
+def _db(cascade: bool):
+    db = IPDB()
+    db.register_oracle("truth", truth)
+    db.sql("CREATE LLM MODEL big PATH 'oracle:truth' ON PROMPT")
+    if cascade:
+        # the proxy is ~20x cheaper per call than the expensive model
+        db.register_oracle("proxy", proxy,
+                           latency_model=lambda i, o: 0.1)
+        db.sql("CREATE LLM MODEL small PATH 'oracle:proxy' ON PROMPT")
+    return db
+
+
+def _q(lo, hi, with_clause=""):
+    return (f"SELECT a, LLM big (PROMPT '{PROMPT}') {with_clause} AS flag "
+            f"FROM T WHERE a >= {lo} AND a < {hi}")
+
+
+def run(quick: bool = False):
+    n = 96 if quick else 320
+    half = n // 2
+    # slice A (a < half) warms the calibration reservoir; slice B is
+    # disjoint, so measurement prompts never hit the cross-query cache
+    db_d = _db(cascade=False)
+    db_d.register_table("T", Table.from_rows(_mk(n)))
+    r_d = db_d.sql(_q(half, n))
+    db_d.close()
+
+    db_c = _db(cascade=True)
+    db_c.register_table("T", Table.from_rows(_mk(n)))
+    r_boot = db_c.sql(_q(0, half, WITH))
+    r_c = db_c.sql(_q(half, n, WITH))
+    db_c.close()
+
+    want = {r["a"]: r["flag"] for r in r_d.table.rows()}
+    got = {r["a"]: r["flag"] for r in r_c.table.rows()}
+    if set(want) != set(got):
+        raise AssertionError("cascade changed the output row set")
+    precision = sum(want[a] == got[a] for a in want) / len(want)
+    target = 0.95
+    if precision < target:
+        raise AssertionError(
+            f"measured precision {precision:.3f} violates the "
+            f"{target} contract")
+
+    direct_calls = r_d.stats.llm_calls
+    expensive_calls = r_c.stats.escalated_calls
+    if r_c.stats.proxy_calls == 0:
+        raise AssertionError("calibrated run never exercised the cascade")
+    if expensive_calls > 0.5 * direct_calls:
+        raise AssertionError(
+            f"cascade made {expensive_calls} expensive calls vs "
+            f"{direct_calls} direct — expected <= 0.5x")
+
+    rows = []
+    for name, r in (("direct", r_d), ("bootstrap", r_boot),
+                    ("calibrated", r_c)):
+        s = r.stats
+        calls = max(1, s.llm_calls + s.escalated_calls)
+        esc_frac = (s.escalated_rows / s.cascade_rows
+                    if s.cascade_rows else 0.0)
+        prec = precision if name == "calibrated" else 1.0
+        rows.append((
+            f"cascade.{name}",
+            round(s.sim_latency_s / calls * 1e6, 1),
+            f"llm_calls={s.llm_calls};proxy_calls={s.proxy_calls};"
+            f"expensive_calls={s.escalated_calls};"
+            f"escalated_frac={esc_frac:.3f};"
+            f"makespan_s={s.sim_latency_s:.2f};"
+            f"precision={prec:.3f};target={target}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

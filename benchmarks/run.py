@@ -33,6 +33,7 @@ MODULES = [
     ("adaptive_stats", "benchmarks.bench_adaptive"),
     ("multibackend", "benchmarks.bench_multibackend"),
     ("prefix_paging", "benchmarks.bench_prefix_paging"),
+    ("cascade", "benchmarks.bench_cascade"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -70,6 +70,16 @@ class IPDB:
             # n_samples>1 decodes that many streams per row off a shared
             # copy-on-write prompt fork and majority-votes the answer.
             "kv_prefix_mode": "radix", "kv_quant": "none", "n_samples": 1,
+            # calibrated model cascades: any model whose merged options
+            # carry cascade_proxy=<model> routes through a CascadePredictor
+            # targeting cascade_target_precision (override per model via
+            # OPTIONS or per expression via PREDICT ... WITH (...)).
+            # cascade_min_records gates calibration on held-out evidence;
+            # cascade_audit_every audits 1-in-N accepted rows to keep the
+            # reservoir honest (0 disables).  enable_cascade (optimizer
+            # flag, in DEFAULT_FLAGS) turns routing off entirely.
+            "cascade_target_precision": 0.9, "cascade_min_records": 8,
+            "cascade_audit_every": 16,
             **DEFAULT_FLAGS,
         }
         if session_options:
@@ -191,10 +201,36 @@ class IPDB:
         merged = dict(info.options or {})
         merged.setdefault("base_api", entry.base_api)
         info = dataclasses.replace(info, options=merged)
-        return PredictOperator(info, self._make_executor(entry), self.options,
+        return PredictOperator(info, self._resolve_executor(entry, info),
+                               self.options,
                                prompt_cache=self.prompt_cache,
                                service=self.inference_service,
                                stats_store=self.stats_store)
+
+    def _resolve_executor(self, entry: ModelEntry,
+                          info: PredictInfo) -> Predictor:
+        """Executor for one predict node: the entry's backend, wrapped in a
+        CascadePredictor when a cascade proxy is configured (session
+        option < model OPTIONS < expression WITH precedence) and the
+        optimizer did not route the node direct."""
+        merged = {**self.options, **(info.options or {})}
+        proxy_name = merged.get("cascade_proxy")
+        if (proxy_name and bool(merged.get("enable_cascade", True))
+                and str(merged.get("cascade_route", "cascade")) != "direct"
+                and not info.agg):
+            from repro.core.cascade import CascadePredictor
+            from repro.core.stats import stats_key
+            proxy_entry = self.catalog.model(str(proxy_name))
+            return CascadePredictor(
+                self._make_executor(proxy_entry),
+                self._make_executor(entry),
+                store=self.stats_store, key=stats_key(info),
+                proxy_model=str(proxy_name),
+                target_precision=float(
+                    merged.get("cascade_target_precision", 0.9)),
+                min_records=int(merged.get("cascade_min_records", 8)),
+                audit_every=int(merged.get("cascade_audit_every", 16)))
+        return self._make_executor(entry)
 
     # -- entry point -------------------------------------------------------
     def sql(self, query: str, *, explain: bool = False) -> QueryResult:
@@ -261,6 +297,10 @@ class IPDB:
         return stats_section(plan, self.stats_store,
                              CostModel(self.stats_store, self.options))
 
+    def _cascade_repr(self, plan: Node) -> str:
+        from repro.core.cascade import cascade_section
+        return cascade_section(plan, self.stats_store, self.options)
+
     def _make_pilot(self) -> Optional[PilotSampler]:
         if not bool(self.options.get("enable_pilot", True)):
             return None
@@ -284,7 +324,8 @@ class IPDB:
                 + "\n-- optimized --\n" + plan_repr(opt)
                 + "\n-- physical --\n" + ex.physical_plan(opt)
                 + "\n-- dispatch --\n" + self._dispatch_repr()
-                + "\n-- stats --\n" + self._stats_repr(opt))
+                + "\n-- stats --\n" + self._stats_repr(opt)
+                + "\n-- cascade --\n" + self._cascade_repr(opt))
 
     def _run_select(self, stmt: SelectStmt, explain: bool) -> QueryResult:
         t0 = time.time()
@@ -306,7 +347,8 @@ class IPDB:
         plan_text = (plan_repr(plan) + "\n-- physical --\n"
                      + ex.physical_plan(plan) + "\n-- dispatch --\n"
                      + self._dispatch_repr() + "\n-- stats --\n"
-                     + self._stats_repr(plan)) if explain else None
+                     + self._stats_repr(plan) + "\n-- cascade --\n"
+                     + self._cascade_repr(plan)) if explain else None
         before = dataclasses.replace(svc.stats)
         table = ex.run(plan)
         st = ex.stats

@@ -43,6 +43,17 @@ class CallResult:
     decode_tokens: int = 0        # lock-step decode tokens generated
     prefix_hits: int = 0          # shared-prefix KV memo/radix hits
     radix_hit_tokens: int = 0     # prompt tokens served from the radix tree
+    # per-answer confidence scores, one per returned row, aligned with the
+    # parsed objects.  Backends with calibrated scores (tabular classifiers,
+    # oracles carrying a "__confidence__" field) populate them; text-only
+    # backends leave None, which readers treat as all-1.0 (logit-free).
+    confidences: Optional[List[float]] = None
+    # cascade accounting (CascadePredictor fills these; whole-batch counts
+    # ride on the first result of a dispatch, like the engine counters)
+    proxy_calls: int = 0          # proxy-stage complete_many prompt count
+    escalated_calls: int = 0      # expensive-stage calls actually made
+    cascade_rows: int = 0         # rows routed through the cascade
+    escalated_rows: int = 0       # rows escalated to the expensive stage
 
 
 class Predictor:
@@ -287,7 +298,7 @@ class OracleExecutor(Predictor):
             return CallResult(text, in_toks, out,
                               self.latency_model(in_toks, out), wall)
         answers = self.oracle_fn(instruction, rows or [{}] * num_rows)
-        objs = []
+        objs, confs = [], []
         # num_rows == 0 → table generation: the oracle decides cardinality
         take = answers if num_rows == 0 else answers[:num_rows]
         for r_ans in take:
@@ -298,14 +309,19 @@ class OracleExecutor(Predictor):
                     v = self._corrupt(v, typ, rng)
                 o[name] = v
             objs.append(o)
+            # oracles may carry a per-row score under the reserved
+            # "__confidence__" key; schema filtering keeps it out of `o`
+            confs.append(float(r_ans.get("__confidence__", 1.0)))
         while len(objs) < num_rows:
             objs.append({name: None for name, _ in schema})
+            confs.append(0.0)
         text = json.dumps(objs[0] if num_rows == 1 else objs)
         if rng.uniform() < self.malform_rate:
             text = "Sure! Here is the result:\n" + text[:max(3, len(text) - 5)]
         out_toks = TOK.count_tokens(text)
         return CallResult(text, in_toks, out_toks,
-                          self.latency_model(in_toks, out_toks), wall)
+                          self.latency_model(in_toks, out_toks), wall,
+                          confidences=confs if num_rows > 0 else None)
 
     def complete(self, prompt, schema, num_rows, *, shared_prefix="",
                  rows=None, instruction=""):
@@ -347,11 +363,12 @@ class TabularExecutor(Predictor):
         t0 = time.time()
         outs = self.predict_fn(rows or [])
         objs = [{n: o.get(n) for n, _ in schema} for o in outs]
+        confs = [float(o.get("__confidence__", 1.0)) for o in outs]
         text = json.dumps(objs[0] if num_rows == 1 else objs)
         wall = time.time() - t0
         return CallResult(text, 0, 0,
                           max(wall, self.latency_per_row * max(1, num_rows)),
-                          wall)
+                          wall, confidences=confs or None)
 
     def complete_many(self, prompts, schema, num_rows_list, *,
                       shared_prefix="", rows_list=None, instruction=""):
@@ -366,11 +383,13 @@ class TabularExecutor(Predictor):
         results, off = [], 0
         for rws, nr in zip(rows_list, num_rows_list):
             k = len(rws or [])
-            objs = [{n: o.get(n) for n, _ in schema}
-                    for o in outs[off:off + k]]
+            part = outs[off:off + k]
+            objs = [{n: o.get(n) for n, _ in schema} for o in part]
+            confs = [float(o.get("__confidence__", 1.0)) for o in part]
             off += k
             text = json.dumps(objs[0] if nr == 1 else objs)
             results.append(CallResult(
                 text, 0, 0,
-                max(per, self.latency_per_row * max(1, nr)), per))
+                max(per, self.latency_per_row * max(1, nr)), per,
+                confidences=confs or None))
         return results

@@ -38,6 +38,7 @@ DEFAULT_FLAGS = {
     "enable_join_order": True,
     "enable_merge": True,
     "enable_select_order": True,
+    "enable_cascade": True,
 }
 
 
@@ -103,7 +104,10 @@ class Optimizer:
         if self.flags["enable_select_order"]:
             plan = self._order_semantic_selects(plan)
         plan = self._annotate_selectivities(plan)
-        return self._annotate_cardinalities(plan)
+        plan = self._annotate_cardinalities(plan)
+        if self.flags["enable_cascade"]:
+            plan = self._choose_cascade_routes(plan)
+        return plan
 
     # -- helpers --------------------------------------------------------
     def _map_children(self, n: Node, fn) -> Node:
@@ -303,6 +307,74 @@ class Optimizer:
                                  "est_cross_rows": float(est)})
             return SemanticJoin(n.left, n.right, info)
         return n
+
+    # -- pass: cascade-vs-direct route choice (PR 7) ------------------------
+    def _choose_cascade_routes(self, n: Node) -> Node:
+        """For every semantic operator with a configured cascade proxy,
+        choose cascade vs direct through the cost model and stamp the
+        calibration snapshot (thresholds, escalation rate, contract
+        status) on the node's options — the CascadePredictor executes
+        exactly the stamped snapshot and EXPLAIN's `-- cascade --` section
+        renders it.  Runs after cardinality annotation so est_in_rows is
+        available.  Decision rule:
+
+          unachievable/violated  contract cannot be (or was not) met →
+                                 route direct, cascade disabled;
+          ok                     cascade iff proxy-stage + escalated-band
+                                 call cost (expected calls x per-call
+                                 latency — the metered resource) beats
+                                 the direct route's under the observed
+                                 escalation rate.  Total cost, not
+                                 makespan: with a large worker pool
+                                 direct's few calls all run in parallel,
+                                 which would hide the cascade's actual
+                                 win (fewer expensive calls);
+          cold                   cascade (escalate-everything bootstrap:
+                                 full direct cost + proxy scoring, buys
+                                 the held-out evidence future queries
+                                 calibrate from).
+        """
+        n = self._map_children(n, self._choose_cascade_routes)
+        if not isinstance(n, (Predict, SemanticJoin)):
+            return n
+        info = n.info
+        opts = {**self.session, **(info.options or {})}
+        proxy = opts.get("cascade_proxy")
+        if not proxy or info.agg or \
+                (isinstance(n, Predict) and n.child is None):
+            return n
+        from repro.core.stats import stats_key
+        target = float(opts.get("cascade_target_precision", 0.9))
+        cal = self.stats.calibrate_cascade(
+            stats_key(info), target,
+            min_records=int(opts.get("cascade_min_records", 8)))
+        route = "cascade"
+        if cal.status in ("unachievable", "violated"):
+            route = "direct"
+        elif cal.status == "ok":
+            rows = float(opts.get("est_cross_rows",
+                                  opts.get("est_in_rows", 32.0)) or 32.0)
+            direct = self.cost.estimate(info, rows)
+            esc = self.cost.estimate(info, rows * cal.escalation_rate)
+            pinfo = dataclasses.replace(info, model_name=str(proxy))
+            prox = self.cost.estimate(pinfo, rows)
+
+            def call_cost(est):
+                return est.expected_calls * est.per_call_s
+
+            if call_cost(prox) + call_cost(esc) >= call_cost(direct):
+                route = "direct"
+        info = dataclasses.replace(info, options={
+            **info.options, "cascade_route": route,
+            "cascade_proxy": str(proxy),
+            "cascade_target_precision": target,
+            "cascade_tau_pos": cal.tau_pos,
+            "cascade_tau_neg": cal.tau_neg,
+            "cascade_esc_rate": cal.escalation_rate,
+            "cascade_status": cal.status})
+        if isinstance(n, SemanticJoin):
+            return SemanticJoin(n.left, n.right, info)
+        return Predict(n.child, info)
 
     def _placement_cost(self, pred_node: Predict,
                         rows: float) -> Tuple[float, float, float]:

@@ -44,7 +44,7 @@ from repro.relational.table import Table, _coerce
 
 __all__ = ["DEFAULTS", "PredictStats", "PredictOperator", "PromptCache",
            "PendingBatch", "PendingChunk", "makespan", "extract_json",
-           "parse_structured", "cast_value"]
+           "parse_structured", "cast_value", "render_rows"]
 
 DEFAULTS = {
     "batch_size": 16,        # marshaled rows per call
@@ -82,6 +82,11 @@ class PredictStats:
     decode_tokens: int = 0         # lock-step decode tokens generated
     prefix_hits: int = 0           # shared-prefix KV memo/radix hits
     radix_hit_tokens: int = 0      # prompt tokens served from the radix tree
+    # cascade accounting (CascadePredictor backend; zero for direct routes)
+    proxy_calls: int = 0           # proxy-stage prompts scored
+    escalated_calls: int = 0       # expensive-stage calls actually made
+    cascade_rows: int = 0          # rows routed through a cascade
+    escalated_rows: int = 0        # rows escalated to the expensive stage
 
     def add(self, o: "PredictStats") -> None:
         for f in dataclasses.fields(self):
@@ -139,6 +144,17 @@ def cast_value(v, typ: str):
         return str(v)
     except (TypeError, ValueError):
         return None
+
+
+def render_rows(rows: List[dict]) -> str:
+    """Render marshaled input rows into the prompt tail.  Module-level so
+    the CascadePredictor can split a marshaled prompt back into its
+    (preamble, rendered rows) parts when re-batching escalations."""
+    if len(rows) == 1:
+        return "Input: " + json.dumps(rows[0], default=str)
+    return (f"Inputs ({len(rows)} rows — return a JSON array with "
+            f"exactly {len(rows)} objects, in order): "
+            + json.dumps(rows, default=str))
 
 
 _MISS = object()
@@ -246,7 +262,13 @@ class PredictOperator:
         # else a private per-operator dict
         self.prompt_cache = prompt_cache
         self.cache: Dict[Tuple, List[Optional[object]]] = {}
-        self._ns = (info.model_name, self._instruction())
+        # cascaded executors carry a stage tag: their (possibly
+        # proxy-resolved) answers must not poison the direct route's
+        # cross-query prompt-cache namespace, and their dispatch
+        # accounting records under the staged stats key
+        self._stage = str(getattr(executor, "stats_stage", "") or "")
+        self._ns = (info.model_name, self._instruction()) + \
+            ((self._stage,) if self._stage else ())
         self.stats = PredictStats()
         # adaptive statistics: calls/tokens/latency are recorded by the
         # service at dispatch; the operator records retries + fallbacks
@@ -272,11 +294,7 @@ class PredictOperator:
                 f"No explanations, no code fences.")
 
     def _render_rows(self, rows: List[dict]) -> str:
-        if len(rows) == 1:
-            return "Input: " + json.dumps(rows[0], default=str)
-        return (f"Inputs ({len(rows)} rows — return a JSON array with "
-                f"exactly {len(rows)} objects, in order): "
-                + json.dumps(rows, default=str))
+        return render_rows(rows)
 
     # ------------------------------ dispatch -------------------------------
     def _open_group(self) -> DispatchGroup:
@@ -293,7 +311,7 @@ class PredictOperator:
             num_rows=nr if exact_rows else max(nr, 1),
             executor=self.executor, rows=rows,
             dedup=bool(self.opts.get("use_dedup", True)),
-            stats_key=self._skey)
+            stats_key=self._skey, stage=self._stage)
         handle, owned = self.service.submit_one(req)
         if not owned:
             self.stats.inflight_hits += 1
@@ -533,6 +551,10 @@ class PredictOperator:
         self.stats.decode_tokens += res.decode_tokens
         self.stats.prefix_hits += res.prefix_hits
         self.stats.radix_hit_tokens += res.radix_hit_tokens
+        self.stats.proxy_calls += res.proxy_calls
+        self.stats.escalated_calls += res.escalated_calls
+        self.stats.cascade_rows += res.cascade_rows
+        self.stats.escalated_rows += res.escalated_rows
 
     def _note_retry(self) -> None:
         self.stats.retries += 1

@@ -108,6 +108,17 @@ class DispatchGroup:
         return float(sum(self.latencies))
 
 
+def staged_key(key: Tuple[str, str], stage: str) -> Tuple[str, str]:
+    """Statistics-store key for one cascade stage of a (model, instruction)
+    predicate.  Stage-tagged keys keep a cascaded dispatch's merged-call
+    accounting separate from the base key, so a predicate's per-call stats
+    are never double-counted (once inside the cascade stages, once at the
+    service) — the fix for the PR 7 stats double-count."""
+    if not stage:
+        return key
+    return (f"{key[0]}#{stage}", key[1])
+
+
 @dataclasses.dataclass
 class InferenceRequest:
     """One executor call to be: a fully rendered prompt plus the metadata
@@ -124,18 +135,24 @@ class InferenceRequest:
     # statistics-store key ((model, raw instruction)); set by the predict
     # operator so dispatch accounting can feed the adaptive cost model
     stats_key: Optional[Tuple[str, str]] = None
+    # cascade stage tag ("" = direct).  Staged requests batch and dedup
+    # separately from direct ones, and their dispatch accounting records
+    # under `staged_key(stats_key, stage)` so a cascaded predicate's base
+    # key only ever sees the per-stage records written by the cascade
+    # executor itself (never the merged two-stage call on top of them).
+    stage: str = ""
 
     @property
     def queue_key(self) -> Tuple:
         # shared_prefix included so every dispatch batch is
         # prefix-homogeneous (executors apply one prefix per batch)
         return (self.model_name, self.instruction, self.schema,
-                self.shared_prefix)
+                self.shared_prefix, self.stage)
 
     @property
     def dedup_key(self) -> Tuple:
         return (self.model_name, self.instruction, self.schema,
-                self.shared_prefix, self.prompt, self.num_rows)
+                self.shared_prefix, self.prompt, self.num_rows, self.stage)
 
 
 class InferenceHandle:
@@ -501,8 +518,8 @@ class InferenceService:
             for h, res in zip(handles, results):
                 if h.request.stats_key:
                     self.stats_store.record_call(
-                        h.request.stats_key, res.in_tokens, res.out_tokens,
-                        res.sim_latency_s)
+                        staged_key(h.request.stats_key, h.request.stage),
+                        res.in_tokens, res.out_tokens, res.sim_latency_s)
 
     # -- forcing / lifecycle ---------------------------------------------
     def _force(self, handle: InferenceHandle) -> None:

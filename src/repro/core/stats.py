@@ -46,9 +46,10 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.executors import default_latency_model
-from repro.core.service import makespan
+from repro.core.service import makespan, staged_key
 
-__all__ = ["stats_key", "PredicateStats", "StatisticsStore", "CostEstimate",
+__all__ = ["stats_key", "staged_key", "PredicateStats", "CascadeStats",
+           "CascadeCalibration", "StatisticsStore", "CostEstimate",
            "CostModel", "PilotSampler", "expected_stack_cost", "order_rank",
            "stats_section"]
 
@@ -103,6 +104,74 @@ class PredicateStats:
         return self.fallbacks / self.calls if self.calls else 0.0
 
 
+#: confidence-histogram resolution for cascade score sketches
+_CASCADE_BINS = 20
+#: held-out agreement reservoir capacity per (model, instruction) key
+_CASCADE_RESERVOIR = 256
+
+
+class CascadeStats:
+    """Cascade calibration state for one (model, instruction) key:
+
+      * a held-out AGREEMENT RESERVOIR — up to `_CASCADE_RESERVOIR`
+        (row_hash → (proxy confidence, proxy verdict, proxy == expensive))
+        records from escalated/audited rows, the ground truth behind
+        threshold calibration.  Keyed by the deterministic row hash and
+        evicted keep-smallest-hashes, the reservoir's final content is a
+        pure set-union of everything recorded — independent of the order
+        concurrent dispatch workers insert in (the store's determinism
+        contract);
+      * SCORE-DISTRIBUTION SKETCHES — per-verdict confidence histograms
+        over every proxy-scored row, used to estimate the escalation rate
+        a threshold pair implies;
+      * routing counters (rows routed/escalated, per-stage calls, audit
+        agreement), all order-independent sums.
+    """
+    __slots__ = ("reservoir", "hist_pos", "hist_neg", "routed_rows",
+                 "escalated_rows", "proxy_calls", "expensive_calls",
+                 "audited", "audit_agree")
+
+    def __init__(self):
+        self.reservoir: Dict[int, Tuple[float, bool, bool]] = {}
+        self.hist_pos = np.zeros(_CASCADE_BINS, np.int64)
+        self.hist_neg = np.zeros(_CASCADE_BINS, np.int64)
+        self.routed_rows = 0
+        self.escalated_rows = 0
+        self.proxy_calls = 0
+        self.expensive_calls = 0
+        self.audited = 0
+        self.audit_agree = 0
+
+    @property
+    def n_records(self) -> int:
+        return len(self.reservoir)
+
+
+@dataclasses.dataclass
+class CascadeCalibration:
+    """A calibrated (threshold pair, contract estimate) snapshot for one
+    cascade key.  `CascadePredictor.load()` takes ONE snapshot per query —
+    evidence recorded while the query runs only affects future queries,
+    which is what keeps routing deterministic under concurrent dispatch.
+
+    tau_pos / tau_neg are the per-verdict acceptance thresholds: a
+    proxy-positive row resolves immediately iff conf >= tau_pos (likewise
+    negative/tau_neg); everything below either threshold escalates.  A
+    threshold of 2.0 (> any confidence) means 'always escalate that
+    verdict class'."""
+    target: float
+    tau_pos: float = 2.0
+    tau_neg: float = 2.0
+    escalation_rate: float = 1.0       # expected escalated-row fraction
+    empirical_precision: Optional[float] = None
+    n_records: int = 0                 # reservoir size behind the snapshot
+    #: cold (not enough held-out evidence: escalate everything),
+    #: ok (contract achievable at these thresholds),
+    #: unachievable (no threshold meets the target: route direct),
+    #: violated (audited precision fell below the target: route direct)
+    status: str = "cold"
+
+
 class StatisticsStore:
     """Cross-query observation store, owned by the database (a sibling of
     `IPDB.prompt_cache`).  All writers go through the record_* methods so
@@ -117,6 +186,7 @@ class StatisticsStore:
 
     def __init__(self):
         self._d: Dict[Tuple[str, str], PredicateStats] = {}
+        self._c: Dict[Tuple[str, str], CascadeStats] = {}
         self._lock = threading.Lock()
 
     def entry(self, key: Tuple[str, str]) -> PredicateStats:
@@ -125,6 +195,17 @@ class StatisticsStore:
             if rec is None:
                 rec = self._d[key] = PredicateStats()
             return rec
+
+    def cascade_entry(self, key: Tuple[str, str]) -> CascadeStats:
+        with self._lock:
+            rec = self._c.get(key)
+            if rec is None:
+                rec = self._c[key] = CascadeStats()
+            return rec
+
+    def cascade_get(self, key: Tuple[str, str]) -> Optional[CascadeStats]:
+        with self._lock:
+            return self._c.get(key)
 
     def get(self, key: Tuple[str, str]) -> Optional[PredicateStats]:
         with self._lock:
@@ -141,6 +222,7 @@ class StatisticsStore:
     def clear(self) -> None:
         with self._lock:
             self._d.clear()
+            self._c.clear()
 
     # -- writers ---------------------------------------------------------
     def record_call(self, key, in_tokens: int, out_tokens: int,
@@ -172,6 +254,122 @@ class StatisticsStore:
         rec = self.entry(key)
         with self._lock:
             rec.fallbacks += 1
+
+    # -- cascade writers ---------------------------------------------------
+    def record_cascade_scores(self, key, confs: Sequence[float],
+                              verdicts: Sequence[bool]) -> None:
+        """Fold one proxy-scored batch into the per-verdict confidence
+        sketches (every routed row, not just escalated ones)."""
+        rec = self.cascade_entry(key)
+        with self._lock:
+            for c, pos in zip(confs, verdicts):
+                b = min(_CASCADE_BINS - 1,
+                        max(0, int(float(c) * _CASCADE_BINS)))
+                (rec.hist_pos if pos else rec.hist_neg)[b] += 1
+
+    def record_cascade_agreement(self, key, row_hash: int, conf: float,
+                                 verdict: bool, agree: bool, *,
+                                 audited: bool = False) -> None:
+        """One held-out observation: the proxy said `verdict` with `conf`
+        and the expensive model (dis)agreed.  Deterministic capacity
+        eviction keeps the `_CASCADE_RESERVOIR` smallest row hashes, so
+        the reservoir converges to the same set regardless of the order
+        concurrent workers record in."""
+        rec = self.cascade_entry(key)
+        with self._lock:
+            if audited:
+                rec.audited += 1
+                rec.audit_agree += int(bool(agree))
+            rec.reservoir[int(row_hash)] = (float(conf), bool(verdict),
+                                            bool(agree))
+            if len(rec.reservoir) > _CASCADE_RESERVOIR:
+                for h in sorted(rec.reservoir)[_CASCADE_RESERVOIR:]:
+                    del rec.reservoir[h]
+
+    def record_cascade_batch(self, key, rows: int, escalated: int,
+                             proxy_calls: int, expensive_calls: int) -> None:
+        rec = self.cascade_entry(key)
+        with self._lock:
+            rec.routed_rows += int(rows)
+            rec.escalated_rows += int(escalated)
+            rec.proxy_calls += int(proxy_calls)
+            rec.expensive_calls += int(expensive_calls)
+
+    # -- cascade calibration ----------------------------------------------
+    def calibrate_cascade(self, key, target_precision: float, *,
+                          min_records: int = 8) -> CascadeCalibration:
+        """Derive the acceptance-threshold pair meeting `target_precision`
+        from the held-out reservoir.  Per verdict class, records are sorted
+        by descending confidence (hash-tie-broken for a total order) and
+        the threshold is the confidence of the LARGEST prefix whose
+        agreement rate still meets the target — maximum coverage at the
+        contracted precision.  A class with no qualifying prefix keeps
+        tau=2.0 (always escalate).  The implied escalation rate comes from
+        the score sketches (reservoir fallback), the empirical precision
+        from audit records when present, else the accepted reservoir
+        slice."""
+        target = min(max(float(target_precision), 0.0), 1.0)
+        rec = self.cascade_get(key)
+        cal = CascadeCalibration(target=target)
+        if rec is None:
+            return cal
+        with self._lock:
+            records = [(c, pos, agree, h)
+                       for h, (c, pos, agree) in rec.reservoir.items()]
+            hist_pos = rec.hist_pos.copy()
+            hist_neg = rec.hist_neg.copy()
+            audited, audit_agree = rec.audited, rec.audit_agree
+        cal.n_records = len(records)
+        if cal.n_records < max(1, int(min_records)):
+            return cal                 # cold: escalate everything
+
+        def best_tau(cls_records) -> float:
+            # cls_records: [(conf, agree, hash)] for one verdict class
+            cls_records.sort(key=lambda t: (-t[0], t[2]))
+            tau, good = 2.0, 0
+            for k, (conf, agree, _) in enumerate(cls_records, start=1):
+                good += int(agree)
+                # a threshold is only well-defined at a confidence
+                # boundary: tau = conf accepts EVERY record of a tie
+                # group, so a prefix cutting inside one would promise a
+                # precision its own acceptance set does not have
+                if k < len(cls_records) and cls_records[k][0] == conf:
+                    continue
+                if good / k >= target:
+                    tau = conf
+            return tau
+
+        cal.tau_pos = best_tau([(c, a, h) for c, p, a, h in records if p])
+        cal.tau_neg = best_tau([(c, a, h) for c, p, a, h in records
+                                if not p])
+        if cal.tau_pos > 1.0 and cal.tau_neg > 1.0:
+            cal.escalation_rate = 1.0
+            cal.status = "unachievable"
+            return cal
+
+        # escalation rate a threshold implies: sketch mass whose bin
+        # center falls below the class threshold
+        centers = (np.arange(_CASCADE_BINS) + 0.5) / _CASCADE_BINS
+        total = int(hist_pos.sum() + hist_neg.sum())
+        if total > 0:
+            esc = (int(hist_pos[centers < cal.tau_pos].sum())
+                   + int(hist_neg[centers < cal.tau_neg].sum()))
+            cal.escalation_rate = esc / total
+        else:
+            esc = sum(1 for c, p, a, h in records
+                      if c < (cal.tau_pos if p else cal.tau_neg))
+            cal.escalation_rate = esc / len(records)
+
+        accepted = [a for c, p, a, h in records
+                    if c >= (cal.tau_pos if p else cal.tau_neg)]
+        if audited > 0:
+            cal.empirical_precision = audit_agree / audited
+        elif accepted:
+            cal.empirical_precision = sum(accepted) / len(accepted)
+        cal.status = "ok"
+        if audited >= 16 and (audit_agree / audited) < target:
+            cal.status = "violated"    # contract broken on audited rows
+        return cal
 
 
 # ---------------------------------------------------------------------------

@@ -50,7 +50,8 @@ def _qualify(e: Expr, scope: Dict[str, str]) -> Expr:
                                                      c.split(".")[-1])))
         pt = PromptTemplate(e.prompt.raw, e.prompt.instruction, new_inputs,
                             e.prompt.outputs)
-        return PredictExpr(e.model_name, pt, e.source, e.agg, e.resolved_col)
+        return PredictExpr(e.model_name, pt, e.source, e.agg, e.resolved_col,
+                           e.options)
     if dataclasses.is_dataclass(e) and isinstance(e, Expr):
         kw = {}
         for f in dataclasses.fields(e):
@@ -187,8 +188,10 @@ class Binder:
             inputs = entry.input_set or []
             outputs = entry.output_set or []
 
+        # §5.3 precedence: per-expression WITH options over model OPTIONS
         info = PredictInfo(model_name=rel.name, prompt=pt, inputs=inputs,
-                           outputs=outputs, options=dict(entry.options))
+                           outputs=outputs,
+                           options={**entry.options, **(rel.options or {})})
         plan = Predict(child, info)
         out_scope = dict(scope)
         alias = rel.alias
@@ -277,11 +280,13 @@ class Binder:
             outputs = [("match", "BOOLEAN")]
         if not outputs:
             raise BindError(f"predict on {p.model_name} has no output columns")
+        # §5.3 precedence: per-expression WITH options over model OPTIONS
         info = PredictInfo(model_name=p.model_name, prompt=p.prompt,
                            inputs=list(p.prompt.inputs) if p.prompt
                            else list(entry.input_set or []),
                            outputs=outputs, out_prefix=fresh_col("p") + "_",
-                           agg=p.agg, options=dict(entry.options))
+                           agg=p.agg,
+                           options={**entry.options, **(p.options or {})})
         return info
 
     def _plant_scalar_predicts(self, plan: Node, e: Expr, scope) -> Node:

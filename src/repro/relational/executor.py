@@ -49,6 +49,11 @@ class ExecStats:
     decode_tokens: int = 0
     prefix_hits: int = 0
     radix_hit_tokens: int = 0       # prompt tokens served from the radix tree
+    # cascade accounting (CascadePredictor routes; zero for direct plans)
+    proxy_calls: int = 0            # proxy-stage prompts scored
+    escalated_calls: int = 0        # expensive-stage calls actually made
+    cascade_rows: int = 0           # rows routed through a cascade
+    escalated_rows: int = 0         # rows escalated to the expensive stage
 
     @property
     def tokens(self) -> int:
@@ -111,3 +116,7 @@ class PlanExecutor:
         self.stats.decode_tokens += s.decode_tokens
         self.stats.prefix_hits += s.prefix_hits
         self.stats.radix_hit_tokens += s.radix_hit_tokens
+        self.stats.proxy_calls += s.proxy_calls
+        self.stats.escalated_calls += s.escalated_calls
+        self.stats.cascade_rows += s.cascade_rows
+        self.stats.escalated_rows += s.escalated_rows

@@ -177,6 +177,9 @@ class PredictExpr(Expr):
     agg: bool = False
     # name assigned by the planner once materialized into a column:
     resolved_col: Optional[str] = None
+    # per-expression options (WITH (k=v, ...)); highest precedence in the
+    # §5.3 chain: defaults < session SET < model OPTIONS < expression WITH
+    options: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     def columns(self):
         # input columns needed from the child relation

@@ -34,7 +34,8 @@ KEYWORDS = {"SELECT", "FROM", "WHERE", "GROUP", "ORDER", "BY", "LIMIT", "AS",
             "JOIN", "ON", "AND", "OR", "NOT", "LIKE", "CREATE", "TABLE",
             "MODEL", "LLM", "TABULAR", "PREDICT", "PROMPT", "PATH", "API",
             "OPTIONS", "FEATURES", "OUTPUT", "SET", "ASC", "DESC", "NATURAL",
-            "AGG", "TRUE", "FALSE", "DISTINCT", "DROP", "EMBED", "INSERT"}
+            "AGG", "TRUE", "FALSE", "DISTINCT", "DROP", "EMBED", "INSERT",
+            "WITH"}
 
 
 @dataclasses.dataclass
@@ -68,6 +69,8 @@ class RelRef:
     alias: Optional[str] = None
     prompt: Optional[str] = None
     source: Optional["RelRef"] = None  # input relation for llm/predict
+    # per-expression options (WITH (k=v, ...)); merged over model OPTIONS
+    options: Dict[str, object] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -163,6 +166,33 @@ class Parser:
         if t.kind != "str":
             raise SyntaxError(f"expected string, got {t.text!r}")
         return t.text[1:-1].replace("''", "'")
+
+    def _with_options(self) -> Dict[str, object]:
+        """Optional per-expression options: WITH (k = v, ...).  Values:
+        numbers, strings, TRUE/FALSE, bare identifiers (e.g. model
+        names).  Used for e.g. PREDICT ... WITH
+        (cascade_target_precision = 0.95)."""
+        opts: Dict[str, object] = {}
+        if not self.at_word("WITH"):
+            return opts
+        self.eat()
+        self.expect_op("(")
+        while not self.try_op(")"):
+            k = self.ident()
+            self.expect_op("=")
+            t = self.eat()
+            v: object
+            if t.kind == "num":
+                v = float(t.text) if "." in t.text else int(t.text)
+            elif t.kind == "str":
+                v = t.text[1:-1]
+            elif t.kind == "word" and t.text.upper() in ("TRUE", "FALSE"):
+                v = t.text.upper() == "TRUE"
+            else:
+                v = t.text
+            opts[k] = v
+            self.try_op(",")
+        return opts
 
     # -- statements ----------------------------------------------------------
     def parse(self):
@@ -332,13 +362,14 @@ class Parser:
             else:
                 source = self._relref()
             self.expect_op(")")
+            opts = self._with_options()
             alias = None
             if self.at_word("AS"):
                 self.eat()
                 alias = self.ident()
             return RelRef(kind="llm" if kind == "llm" else "predict",
                           name=model, alias=alias, prompt=prompt,
-                          source=source)
+                          source=source, options=opts)
         name = self.ident()
         alias = None
         if self.at_word("AS"):
@@ -439,8 +470,10 @@ class Parser:
                 self.eat()
                 prompt = self.string()
             self.expect_op(")")
+            opts = self._with_options()
             pt = PromptTemplate.parse(prompt) if prompt else None
-            return PredictExpr(model_name=model, prompt=pt, agg=agg)
+            return PredictExpr(model_name=model, prompt=pt, agg=agg,
+                               options=opts)
         # function call or column
         name = self.ident()
         if self.try_op("("):

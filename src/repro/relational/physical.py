@@ -511,6 +511,16 @@ def _inflight_windows(op) -> int:
     return max(1, int(op.opts.get("inflight_windows", 1)))
 
 
+def _cascade_note(info: PredictInfo) -> str:
+    """Physical-plan annotation for a cascaded predict: the route the
+    optimizer chose and the proxy it scores with."""
+    route = info.options.get("cascade_route")
+    if not route:
+        return ""
+    proxy = info.options.get("cascade_proxy", "?")
+    return f" cascade={route}(proxy={proxy})"
+
+
 class PredictOp(PhysicalOp):
     """Scalar/table inference: one shared PredictOperator consumes upstream
     chunks as they arrive, so batching/dedup/prompt-cache state spans the
@@ -556,6 +566,7 @@ class PredictOp(PhysicalOp):
     def describe(self):
         est = self.info.options.get("est_in_rows")
         e = f" est_in={est:.0f}" if est is not None else ""
+        e += _cascade_note(self.info)
         return f"Predict[{self.info.model_name}] out={self.info.out_cols}{e}"
 
 
@@ -654,6 +665,7 @@ class SemanticJoinOp(PhysicalOp):
     def describe(self):
         est = self.info.options.get("est_cross_rows")
         e = f" est_cross={est:.0f}" if est is not None else ""
+        e += _cascade_note(self.info)
         return (f"StreamingSemanticJoin[{self.info.model_name}] "
                 f"window={self.window}{e}")
 

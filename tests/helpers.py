@@ -59,12 +59,15 @@ class LatencyScriptedPredictor(Predictor):
             instruction, rows if rows else [{}] * max(1, num_rows))
         take = answers if num_rows == 0 else answers[:num_rows]
         objs = [{n: a.get(n) for n, _ in schema} for a in take]
+        confs = [float(a.get("__confidence__", 1.0)) for a in take]
         while len(objs) < num_rows:
             objs.append({n: None for n, _ in schema})
+            confs.append(0.0)
         text = json.dumps(objs[0] if num_rows == 1 else objs)
         return CallResult(text, max(1, len(shared_prefix + prompt) // 4),
                           max(1, len(text) // 4), self.latency_for(prompt),
-                          self.sleep_per_call_s)
+                          self.sleep_per_call_s,
+                          confidences=confs if num_rows > 0 else None)
 
     def complete_many(self, prompts, schema, num_rows_list, *,
                       shared_prefix="", rows_list=None, instruction=""):
