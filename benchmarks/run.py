@@ -34,6 +34,7 @@ MODULES = [
     ("multibackend", "benchmarks.bench_multibackend"),
     ("prefix_paging", "benchmarks.bench_prefix_paging"),
     ("cascade", "benchmarks.bench_cascade"),
+    ("frontdoor", "benchmarks.bench_frontdoor"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -15,8 +15,11 @@ Executor resolution by model PATH scheme:
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional
+
+from repro.core.cancel import CancelScope, QueryCancelled
 
 from repro.core.executors import (JaxExecutor, OracleExecutor, Predictor,
                                   TabularExecutor)
@@ -102,6 +105,12 @@ class IPDB:
         # its dispatch through it (batching, in-flight dedup, scheduling);
         # dispatched calls feed the statistics store
         self.inference_service = InferenceService(stats_store=self.stats_store)
+        # front-door streams: parse/bind/optimize are serialized (the
+        # binder's column-name counter and the optimizer's store access
+        # are cheap; the chunked EXECUTION below them runs concurrently),
+        # and each stream gets a monotonically numbered session tag
+        self._bind_lock = threading.Lock()
+        self._stream_seq = 0
 
     # -- lifecycle -------------------------------------------------------
     def close(self, *, cancel_pending: bool = False) -> None:
@@ -195,14 +204,18 @@ class IPDB:
             return TabularExecutor(self._tabular_fns[name])
         raise ValueError(f"cannot resolve executor for PATH {path!r}")
 
-    def _predict_factory(self, info: PredictInfo) -> PredictOperator:
+    def _predict_factory(self, info: PredictInfo,
+                         extra_options: Optional[Dict[str, object]] = None
+                         ) -> PredictOperator:
         entry = self.catalog.model(info.model_name)
         # catalog metadata flows into the operator (API url, secret, options)
         merged = dict(info.options or {})
         merged.setdefault("base_api", entry.base_api)
         info = dataclasses.replace(info, options=merged)
+        session_options = self.options if not extra_options \
+            else {**self.options, **extra_options}
         return PredictOperator(info, self._resolve_executor(entry, info),
-                               self.options,
+                               session_options,
                                prompt_cache=self.prompt_cache,
                                service=self.inference_service,
                                stats_store=self.stats_store)
@@ -252,6 +265,54 @@ class IPDB:
         if isinstance(stmt, SelectStmt):
             return self._run_select(stmt, explain)
         raise TypeError(type(stmt))
+
+    # -- streaming sessions (the front door's entry point) -----------------
+    def stream(self, query: str, *, tenant: str = "",
+               session: Optional[str] = None,
+               cancel_scope: Optional[CancelScope] = None,
+               explain: bool = False) -> "QueryStream":
+        """Open one streaming query session: parse/bind/optimize now
+        (serialized under a short lock), execute lazily — iterating
+        `QueryStream.chunks()` drains the chunked physical pipeline and
+        yields each result chunk as it is produced.  Every inference
+        request the session submits is tagged (tenant, session), so
+        dispatch batches are session-pure, per-session ExecStats are
+        deterministic under concurrency, and `cancel_scope.cancel()`
+        (client disconnect, DELETE /query/<id>) drops the session's
+        still-queued requests within one flush.  Only SELECT statements
+        stream; DDL/SET go through `sql()`."""
+        t0 = time.time()
+        stmt = parse_sql(query)
+        if not isinstance(stmt, SelectStmt):
+            raise ValueError("stream() supports SELECT statements only; "
+                             f"got {type(stmt).__name__}")
+        scope = cancel_scope if cancel_scope is not None else CancelScope()
+        svc = self.inference_service
+        with self._bind_lock:
+            self._stream_seq += 1
+            tag = session or f"q{self._stream_seq}"
+            plan = Binder(self.catalog, self.options).bind_select(stmt)
+            svc.max_dispatch = int(self.options.get("max_dispatch_calls", 0))
+            svc.speculative = bool(self.options.get("speculative_flush",
+                                                    True))
+            svc.cost_model = CostModel(self.stats_store, self.options)
+            pilot = self._make_pilot()
+            plan = Optimizer(self.catalog, self.options,
+                             stats=self.stats_store,
+                             pilot=pilot).optimize(plan)
+        extra = {"tenant": tenant, "session": tag}
+        factory = lambda info: self._predict_factory(info, extra)  # noqa: E731
+        ex = PlanExecutor(self.catalog, factory,
+                          chunk_size=int(self.options.get("chunk_size",
+                                                          2048)),
+                          stats_store=self.stats_store, cancel_scope=scope)
+        plan_text = (plan_repr(plan) + "\n-- physical --\n"
+                     + ex.physical_plan(plan) + "\n-- dispatch --\n"
+                     + self._dispatch_repr() + "\n-- stats --\n"
+                     + self._stats_repr(plan) + "\n-- cascade --\n"
+                     + self._cascade_repr(plan)) if explain else None
+        return QueryStream(self, plan, ex, scope, tag, tenant, plan_text,
+                           pilot, t0)
 
     def _dispatch_repr(self) -> str:
         o = self.options
@@ -369,3 +430,95 @@ class IPDB:
         st.wall_s = time.time() - t0
         self.last_stats = st
         return QueryResult(table, st, plan_text)
+
+
+class QueryStream:
+    """One streaming query session (created by `IPDB.stream`).
+
+    Iterate `chunks()` to drain the chunked physical pipeline; each yielded
+    Table is one result chunk, produced as soon as the pipeline finishes
+    it.  `stats` is populated when the stream ends (normally, by
+    cancellation, or by abandoning the iterator) from the service's
+    per-session counters — never from global deltas, so concurrent streams
+    account exactly.  `cancel()` (or firing the scope from any thread)
+    raises QueryCancelled at the executing thread's next chunk boundary
+    AND immediately drops the session's still-queued service requests, so
+    a cancelled stream stops consuming dispatch within one flush."""
+
+    def __init__(self, db: IPDB, plan: Node, executor: PlanExecutor,
+                 scope: CancelScope, session: str, tenant: str,
+                 plan_text: Optional[str], pilot: Optional[PilotSampler],
+                 t0: float):
+        self.db = db
+        self.scope = scope
+        self.session = session
+        self.tenant = tenant
+        self.plan = plan_text
+        self.stats: Optional[ExecStats] = None
+        self.cancelled = False
+        self._plan_node = plan
+        self._ex = executor
+        self._pilot = pilot
+        self._t0 = t0
+        self._finished = threading.Event()
+        scope.add_callback(self._on_cancel)
+
+    # runs on the CANCELLING thread (not the executing one): dropping the
+    # queued requests here — instead of waiting for the executing thread
+    # to notice — is what bounds cancellation to one flush
+    def _on_cancel(self) -> None:
+        svc = self.db.inference_service
+        svc.cancel_session(self.session)
+        if self._finished.is_set():
+            # scope fired after the stream already finished and released
+            # its tag; drop the tombstone cancel_session just re-created
+            svc.release_session(self.session)
+
+    def cancel(self, reason: str = "") -> bool:
+        return self.scope.cancel(reason)
+
+    def chunks(self) -> Iterator[Table]:
+        gen = self._ex.run_chunks(self._plan_node)
+        try:
+            for chunk in gen:
+                yield chunk
+        except QueryCancelled:
+            self.cancelled = True
+        finally:
+            gen.close()
+            self._finish()
+
+    def run(self) -> QueryResult:
+        """Materialize the whole stream (tests / non-streaming callers)."""
+        parts = list(self.chunks())
+        table: Optional[Table] = None
+        if parts:
+            table = parts[0]
+            for p in parts[1:]:
+                table = table.concat(p)
+        return QueryResult(table, self.stats, self.plan)
+
+    def _finish(self) -> None:
+        if self._finished.is_set():
+            return
+        svc = self.db.inference_service
+        st = self._ex.stats
+        sess = svc.session_stats(self.session)
+        if sess is not None:
+            st.dispatch_batches = sess.dispatch_batches
+            st.mean_batch_occupancy = (
+                sess.dispatched_calls / sess.dispatch_batches
+                if sess.dispatch_batches else 0.0)
+            st.inflight_dedup_hits = sess.inflight_dedup_hits
+            st.cancelled_requests = sess.cancelled_requests
+        st.cancelled = self.cancelled
+        if self._pilot is not None and self._pilot.calls:
+            st.pilot_calls = self._pilot.calls
+            st.in_tokens += self._pilot.in_tokens
+            st.out_tokens += self._pilot.out_tokens
+            st.sim_latency_s += self._pilot.sim_latency_s
+        st.wall_s = time.time() - self._t0
+        self.stats = st
+        self.db.last_stats = st
+        self._finished.set()
+        svc.release_session(self.session)

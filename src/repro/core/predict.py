@@ -58,6 +58,11 @@ DEFAULTS = {
     "dispatch_workers": 1,   # per-backend dispatch pool (1 = synchronous)
     "num_slots": 8,          # continuous-batching decode slots (jax)
     "n_samples": 1,          # self-consistency streams per row (jax)
+    # front-door multi-tenancy tags: every request the operator submits
+    # carries them, so dispatch batches are session-pure and the service
+    # can account (and cancel) per session.  "" = plain Python API.
+    "tenant": "",
+    "session": "",
 }
 
 
@@ -311,7 +316,9 @@ class PredictOperator:
             num_rows=nr if exact_rows else max(nr, 1),
             executor=self.executor, rows=rows,
             dedup=bool(self.opts.get("use_dedup", True)),
-            stats_key=self._skey, stage=self._stage)
+            stats_key=self._skey, stage=self._stage,
+            tenant=str(self.opts.get("tenant", "") or ""),
+            session=str(self.opts.get("session", "") or ""))
         handle, owned = self.service.submit_one(req)
         if not owned:
             self.stats.inflight_hits += 1
@@ -407,12 +414,16 @@ class PredictOperator:
 
     def resolve(self, pending: PendingChunk) -> Table:
         """Phase 2: force dispatch, parse/retry/fallback every batch, and
-        assemble the output chunk.  `flush()` schedules concurrency-capable
-        backends on their worker lanes and returns; the per-handle
-        `result()` calls below then block on those futures (synchronous
-        backends still dispatch inline during the flush)."""
+        assemble the output chunk.  `drain_for` dispatches exactly the
+        slices covering this chunk's handles (scheduling
+        concurrency-capable backends on their worker lanes); requests
+        queued behind them — later inflight windows, other sessions —
+        stay queued for their own resolve, so an early-exit Limit can
+        still cancel them undispatched.  The per-handle `result()` calls
+        below then block on any lane futures (synchronous backends
+        dispatch inline during the drain)."""
         t0 = time.time()
-        self.service.flush()
+        self.service.drain_for([b.handle for b in pending.batches])
         results: Dict[int, List[Optional[object]]] = {}
         for b in pending.batches:
             vals = self._resolve_batch(b, pending.group)
@@ -491,7 +502,7 @@ class PredictOperator:
         for g in groups:
             prompt = instr + "\n" + self._render_rows(g) + suffix
             pend.append((g, *self._submit_call(prompt, 1, g, instr)))
-        self.service.flush()
+        self.service.drain_for([h for _, h, _ in pend])
         outs = []
         retries = int(self.opts.get("retry_limit", 2))
         for g, handle, owned in pend:
@@ -536,7 +547,7 @@ class PredictOperator:
                 prompt = instr + "\n" + self._render_rows([r])
                 handle, owned = self._submit_call(prompt, 1, [r], instr)
                 subs.append(PendingBatch([i], [r], handle, owned))
-            self.service.flush()
+            self.service.drain_for([sb.handle for sb in subs])
             return [self._resolve_batch(sb, group)[0] for sb in subs]
         if parsed is None:
             return [[None] * len(self.info.outputs)]

@@ -63,6 +63,7 @@ import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.cancel import QueryCancelled
 from repro.core.executors import CallResult, Predictor, default_latency_model
 
 
@@ -141,18 +142,28 @@ class InferenceRequest:
     # key only ever sees the per-stage records written by the cascade
     # executor itself (never the merged two-stage call on top of them).
     stage: str = ""
+    # front-door multi-tenancy tags ("" = the plain Python API).  Both
+    # are part of queue_key AND dedup_key: requests of different tenants
+    # or sessions never share a dispatch batch or join each other's
+    # handles, so (a) per-session ExecStats are a pure function of that
+    # session's own submission order (byte-identical across
+    # interleavings), and (b) cancelling one session can drop its whole
+    # queued backlog without touching another session's handles.
+    tenant: str = ""
+    session: str = ""
 
     @property
     def queue_key(self) -> Tuple:
         # shared_prefix included so every dispatch batch is
         # prefix-homogeneous (executors apply one prefix per batch)
         return (self.model_name, self.instruction, self.schema,
-                self.shared_prefix, self.stage)
+                self.shared_prefix, self.stage, self.tenant, self.session)
 
     @property
     def dedup_key(self) -> Tuple:
         return (self.model_name, self.instruction, self.schema,
-                self.shared_prefix, self.prompt, self.num_rows, self.stage)
+                self.shared_prefix, self.prompt, self.num_rows, self.stage,
+                self.tenant, self.session)
 
 
 class InferenceHandle:
@@ -186,6 +197,21 @@ class InferenceHandle:
         if self._result is None:
             raise RuntimeError("inference request cancelled before dispatch")
         return self._result
+
+
+@dataclasses.dataclass
+class SessionCounters:
+    """Per-session dispatch accounting (front-door streams).  Because a
+    session's requests never share a batch with another session's (the
+    session tag is part of queue_key), these are well-defined per-session
+    numbers, not an attribution heuristic — they are the session-scoped
+    analog of the global before/after deltas `IPDB.sql` takes on
+    ServiceStats, which would double-count under concurrent sessions."""
+    submitted: int = 0
+    dispatched_calls: int = 0
+    dispatch_batches: int = 0
+    inflight_dedup_hits: int = 0
+    cancelled_requests: int = 0        # queued handles dropped by a cancel
 
 
 @dataclasses.dataclass
@@ -254,6 +280,13 @@ class InferenceService:
         self.max_dispatch = int(max_dispatch)   # 0 = unbounded batch
         self.speculative = bool(speculative)
         self.stats = ServiceStats()
+        # front-door accounting: per-session dispatch counters and
+        # per-tenant dispatched-call totals (fairness-ratio reporting),
+        # plus the tombstone set of cancelled sessions (submits from a
+        # cancelled session fail fast instead of re-queueing work)
+        self._sessions: Dict[str, SessionCounters] = {}
+        self._tenant_calls: Dict[str, int] = collections.defaultdict(int)
+        self._cancelled_sessions: set = set()
         # optional adaptive StatisticsStore: every dispatched call records
         # its tokens + modeled latency under the request's stats_key
         self.stats_store = stats_store
@@ -273,7 +306,16 @@ class InferenceService:
         with self._lock:
             if self._closed:
                 raise RuntimeError("InferenceService is shut down")
+            if request.session and request.session in self._cancelled_sessions:
+                # the session's scope fired: nothing new may enter the
+                # queues on its behalf (retries/fallbacks die fast here
+                # instead of re-queueing work the client walked away from)
+                raise QueryCancelled(
+                    f"session {request.session!r} cancelled")
             self.stats.submitted += 1
+            sess = self._session_counters(request.session)
+            if sess is not None:
+                sess.submitted += 1
             if request.dedup:
                 h = self._inflight.get(request.dedup_key)
                 # joinable while the entry lives (queued, or speculatively
@@ -284,6 +326,8 @@ class InferenceService:
                 if h is not None and h._error is None:
                     h.refs += 1
                     self.stats.inflight_dedup_hits += 1
+                    if sess is not None:
+                        sess.inflight_dedup_hits += 1
                     return h, False
             h = InferenceHandle(request, self)
             self._queues.setdefault(request.queue_key, []).append(h)
@@ -420,6 +464,79 @@ class InferenceService:
         if first_err is not None:
             raise first_err
 
+    def drain_for(self, handles: Sequence[InferenceHandle]) -> None:
+        """Dispatch until every given handle is dispatched or scheduled.
+        Slices are taken in the same priority order and with the same
+        prefix-of-the-queue composition as flush(), but the take stops at
+        the slice containing the LAST target handle: requests queued
+        behind the targets — later inflight windows, other sessions'
+        work — stay queued for their own resolve.  That is what makes
+        early-exit real: a Limit that closes its pipeline can still
+        cancel the next window's requests before any flush dispatches
+        them (with max_dispatch=0 a queue is a single slice, so this
+        degenerates to flush's whole-queue dispatch and nothing changes).
+        Batch membership remains a pure function of submission order."""
+        first_err: Optional[BaseException] = None
+        targets = set(handles)
+        while True:
+            inline: List[_DispatchTask] = []
+            with self._lock:
+                self._purge_dispatched()
+                todo = {h.request.queue_key for h in targets
+                        if not h.done and h._event is None}
+                if not todo:
+                    break
+                progressed = False
+                for qkey in self._priority_order():
+                    if qkey not in todo:
+                        continue
+                    for task in self._take_slices_for(qkey, targets):
+                        progressed = True
+                        if self._workers_for(task) > 1:
+                            self._schedule(task)
+                        else:
+                            inline.append(task)
+                if not progressed:
+                    break       # targets left the queues (cancelled)
+            for task in inline:
+                try:
+                    self._dispatch(task.handles)
+                except BaseException as e:
+                    if first_err is None:
+                        first_err = e
+        if first_err is not None:
+            raise first_err
+
+    def _take_slices_for(self, qkey: Tuple, targets: set
+                         ) -> List[_DispatchTask]:
+        """Like `_take_slices` (non-speculative), but only the prefix of
+        the queue through the last target handle, rounded up to a slice
+        boundary (caller holds the lock)."""
+        handles = self._queues.get(qkey) or []
+        step = self.max_dispatch if self.max_dispatch > 0 else len(handles)
+        if step <= 0:
+            return []
+        last = -1
+        for i, h in enumerate(handles):
+            if h in targets:
+                last = i
+        if last < 0:
+            return []
+        n_take = ((last // step) + 1) * step
+        take, rest = handles[:n_take], handles[n_take:]
+        if rest:
+            self._queues[qkey] = rest
+        else:
+            self._queues.pop(qkey, None)
+        tasks = []
+        for s in range(0, len(take), step):
+            batch = take[s:s + step]
+            for h in batch:
+                if h.request.dedup:
+                    self._inflight.pop(h.request.dedup_key, None)
+            tasks.append(_DispatchTask(batch))
+        return tasks
+
     def kick(self) -> None:
         """Speculative flush of hot queues: start, in the background, the
         complete `max_dispatch`-sized slices that a later flush() would
@@ -510,6 +627,14 @@ class InferenceService:
             self.stats.dispatched_calls += len(reqs)
             if background:
                 self.stats.async_batches += 1
+            # batches are session/tenant-homogeneous (tags are part of
+            # queue_key), so whole-batch attribution is exact
+            sess = self._session_counters(reqs[0].session)
+            if sess is not None:
+                sess.dispatch_batches += 1
+                sess.dispatched_calls += len(reqs)
+            if reqs[0].tenant:
+                self._tenant_calls[reqs[0].tenant] += len(reqs)
             for h, res in zip(handles, results):
                 h._result = res
                 if h._event is not None:
@@ -593,20 +718,123 @@ class InferenceService:
         submitter cancels — joined submitters keep it alive.  A handle
         whose dispatch batch already started (flush or speculative kick)
         cannot be recalled: cancel returns False and the running batch
-        completes normally."""
+        completes normally.
+
+        Refcount edge (regression-tested): the count is floored at 0 so a
+        cancel that arrives after the handle was force-failed (session
+        cancel, shutdown) or double-cancelled through two unwinding
+        pipelines can never underflow and strip a ref a still-waiting
+        joiner is counting on."""
         with self._lock:
             if handle.done:
                 return False
-            handle.refs -= 1
+            handle.refs = max(0, handle.refs - 1)
             if handle.refs > 0:
                 return False
             q = self._queues.get(handle.request.queue_key)
             if q and handle in q:
                 q.remove(handle)
+                if not q:
+                    self._queues.pop(handle.request.queue_key, None)
                 if handle.request.dedup:
                     self._inflight.pop(handle.request.dedup_key, None)
+                sess = self._session_counters(handle.request.session)
+                if sess is not None:
+                    sess.cancelled_requests += 1
                 return True
             return False
+
+    # -- front-door sessions ---------------------------------------------
+    def _session_counters(self, session: str) -> Optional[SessionCounters]:
+        """Counters for a tagged session ("" = untagged → None).  Caller
+        holds the lock."""
+        if not session:
+            return None
+        sess = self._sessions.get(session)
+        if sess is None:
+            sess = self._sessions[session] = SessionCounters()
+        return sess
+
+    def session_stats(self, session: str) -> SessionCounters:
+        with self._lock:
+            return dataclasses.replace(
+                self._sessions.get(session) or SessionCounters())
+
+    def tenant_dispatched(self, tenant: str) -> int:
+        """Executor calls dispatched so far on behalf of `tenant` — the
+        fairness scheduler's post-paid cost signal."""
+        with self._lock:
+            return self._tenant_calls.get(tenant, 0)
+
+    def session_pending(self, session: str) -> int:
+        """Still-queued requests tagged with `session` (leak check)."""
+        with self._lock:
+            return sum(1 for handles in self._queues.values()
+                       for h in handles if h.request.session == session)
+
+    def cancel_session(self, session: str) -> int:
+        """Cancel-scope hook: drop every still-queued request of one
+        session NOW, from the cancelling thread, without waiting for the
+        executing pipeline to unwind.  Dropped handles fail with
+        `QueryCancelled` (waking any blocked `result()`), lane backlogs
+        that were scheduled but have not started are dropped too, and
+        further submits for the session are rejected.  Batches whose
+        executor call already started complete normally — cancellation
+        takes effect within one flush, never mid-call.  Returns the
+        number of requests dropped."""
+        if not session:
+            return 0
+        err = QueryCancelled(f"session {session!r} cancelled")
+        dropped = 0
+        with self._lock:
+            self._cancelled_sessions.add(session)
+            for qkey in list(self._queues):
+                handles = self._queues[qkey]
+                if not handles or handles[0].request.session != session:
+                    continue                   # queues are session-pure
+                del self._queues[qkey]
+                for h in handles:
+                    if h.request.dedup:
+                        self._inflight.pop(h.request.dedup_key, None)
+                    h.refs = 0
+                    h._error = err
+                    if h._event is not None:
+                        h._event.set()
+                    dropped += 1
+            # scheduled-but-not-started lane tasks: same treatment as
+            # shutdown's backlog release (outstanding count must drop or
+            # wait_idle deadlocks)
+            for lane in self._lanes.values():
+                keep: Deque[_DispatchTask] = collections.deque()
+                while lane.pending:
+                    task = lane.pending.popleft()
+                    if task.handles[0].request.session != session:
+                        keep.append(task)
+                        continue
+                    self._outstanding -= 1
+                    for h in task.handles:
+                        if h.request.dedup:
+                            self._inflight.pop(h.request.dedup_key, None)
+                        h.refs = 0
+                        h._error = err
+                        if h._event is not None:
+                            h._event.set()
+                        dropped += 1
+                lane.pending = keep
+            sess = self._session_counters(session)
+            if sess is not None:
+                sess.cancelled_requests += dropped
+            if self._outstanding == 0:
+                self._idle.notify_all()
+        return dropped
+
+    def release_session(self, session: str) -> None:
+        """Forget a finished session's tombstone + counters (the front
+        door calls this when the session object is torn down, so the
+        per-session maps stay bounded by live sessions)."""
+        with self._lock:
+            self._cancelled_sessions.discard(session)
+            self._sessions.pop(session, None)
 
     @property
     def pending(self) -> int:

@@ -54,6 +54,9 @@ class ExecStats:
     escalated_calls: int = 0        # expensive-stage calls actually made
     cascade_rows: int = 0           # rows routed through a cascade
     escalated_rows: int = 0         # rows escalated to the expensive stage
+    # front-door session accounting (zero for the plain Python API)
+    cancelled: bool = False         # query ended by its CancelScope
+    cancelled_requests: int = 0     # queued service requests dropped
 
     @property
     def tokens(self) -> int:
@@ -63,34 +66,45 @@ class ExecStats:
 class PlanExecutor:
     def __init__(self, catalog: Catalog,
                  predict_factory: Callable[[PredictInfo], "PredictOperator"],
-                 chunk_size: int = 2048, stats_store=None):
+                 chunk_size: int = 2048, stats_store=None,
+                 cancel_scope=None):
         self.cat = catalog
         self.predict_factory = predict_factory
         self.chunk_size = chunk_size
         self.stats_store = stats_store
+        self.cancel_scope = cancel_scope
         self.stats = ExecStats()
 
     # ------------------------------------------------------------------
     def run(self, plan: Node) -> Table:
+        parts = list(self.run_chunks(plan))
+        out = parts[0]
+        for p in parts[1:]:
+            out = out.concat(p)
+        return out
+
+    def run_chunks(self, plan: Node):
+        """Streaming drain: yield result chunks as the pipeline produces
+        them (the front door's entry point; `run` materializes them).
+        A fired CancelScope raises QueryCancelled out of `next_chunk`; the
+        `finally:` closes the tree, which cancels every pending predict
+        chunk on the way down — the caller decides whether cancellation
+        is an error (sql()) or a session outcome (streams)."""
         root = self.lower(plan)
-        parts = []
         root.open()
         try:
             while True:
                 chunk = root.next_chunk()
                 if chunk is None:
                     break
-                parts.append(chunk)
+                yield chunk
         finally:
             root.close()
-        out = parts[0]
-        for p in parts[1:]:
-            out = out.concat(p)
-        return out
 
     def lower(self, plan: Node) -> PhysicalOp:
         return lower(plan, self.cat, self.predict_factory, self.chunk_size,
-                     absorber=self, stats_store=self.stats_store)
+                     absorber=self, stats_store=self.stats_store,
+                     cancel_scope=self.cancel_scope)
 
     def physical_plan(self, plan: Node) -> str:
         """Lowered pipeline as text (operators are created lazily, so no

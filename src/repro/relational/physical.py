@@ -40,10 +40,16 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.cancel import CancelScope
 from repro.relational.plan import (Filter, GroupBy, Join, Limit, Node,
                                    OrderBy, Predict, PredictInfo, Project,
                                    Scan, SemanticJoin)
 from repro.relational.table import Table, _coerce, _np_for
+
+#: chunk-size floor applied under a streaming LIMIT: small enough that an
+#: early exit wastes at most ~a window of inference, large enough that
+#: multi-row marshaling (batch_size rows per call) still fills batches
+LIMIT_CHUNK_FLOOR = 64
 
 
 def empty_table(schema: Dict[str, str]) -> Table:
@@ -118,6 +124,14 @@ class PhysicalOp:
 
     name = "op"
     children: List["PhysicalOp"] = []
+    #: per-session CancelScope (None outside front-door streams).  Checked
+    #: at EVERY chunk boundary at every level — pipeline breakers drain
+    #: their children through next_chunk too, so a cancel lands mid-sort /
+    #: mid-build as fast as mid-stream.  The raised QueryCancelled unwinds
+    #: the generator stack, running each operator's `finally:` (pipelined
+    #: predicts cancel their pending chunks → still-queued service
+    #: requests are dropped).
+    scope: Optional[CancelScope] = None
 
     def __init__(self, out_schema: Dict[str, str]):
         self.out_schema = dict(out_schema)
@@ -130,6 +144,8 @@ class PhysicalOp:
         self._emitted = False
 
     def next_chunk(self) -> Optional[Table]:
+        if self.scope is not None:
+            self.scope.raise_if_cancelled()
         if self._gen is None:
             self.open()
         chunk = next(self._gen, None)
@@ -674,13 +690,29 @@ class SemanticJoinOp(PhysicalOp):
 # lowering: logical Node -> PhysicalOp tree
 # ---------------------------------------------------------------------------
 def lower(node: Node, cat, predict_factory: Callable, chunk_size: int,
-          absorber=None, stats_store=None) -> PhysicalOp:
+          absorber=None, stats_store=None,
+          cancel_scope: Optional[CancelScope] = None) -> PhysicalOp:
     """Lowering pass. `absorber` (usually the PlanExecutor) receives every
     PredictOperator's stats exactly once, when its owning op closes.
     Chunk/window sizes are capped by the optimizer's cardinality
     annotations (est_* in PredictInfo.options) where available.  When a
     `stats_store` is given, semantic-select filters and semantic joins get
-    probes that record observed predicate selectivity into it."""
+    probes that record observed predicate selectivity into it.
+
+    Early-exit Limit: a Limit caps the chunk/window size of its STREAMING
+    subtree (Scan chunks, SemanticJoin windows) to
+    `min(chunk_size, max(LIMIT_CHUNK_FLOOR, n))`, so the pipeline under a
+    `LIMIT n` produces (and the predict operators dispatch) work in
+    limit-sized windows instead of full 2048-row chunks — once the limit
+    is satisfied the close() unwinds and the still-queued windows are
+    cancelled before any flush dispatches them.  The cap stops at
+    pipeline breakers (sort/group-by/join build sides drain their input
+    regardless, so fragmenting their children would only shrink dispatch
+    batches without saving a call).
+
+    `cancel_scope` (front-door sessions) is stamped on every operator so
+    a cancel is observed at the next chunk boundary anywhere in the
+    tree."""
     from repro.core.stats import stats_key
     from repro.relational.expr import find_predicts
 
@@ -698,15 +730,25 @@ def lower(node: Node, cat, predict_factory: Callable, chunk_size: int,
             return (stats_store, stats_key(n.child.info))
         return None
 
-    def rec(n: Node) -> PhysicalOp:
+    def _eff_chunk(cap: Optional[int]) -> int:
+        if cap is None:
+            return chunk_size
+        return max(1, min(chunk_size, max(LIMIT_CHUNK_FLOOR, cap)))
+
+    def rec(n: Node, cap: Optional[int] = None) -> PhysicalOp:
+        op = build(n, cap)
+        op.scope = cancel_scope
+        return op
+
+    def build(n: Node, cap: Optional[int]) -> PhysicalOp:
         sch = n.schema(cat)
         if isinstance(n, Scan):
-            return ScanOp(cat.table(n.table), n.table, chunk_size, sch)
+            return ScanOp(cat.table(n.table), n.table, _eff_chunk(cap), sch)
         if isinstance(n, Filter):
-            return FilterOp(rec(n.child), n.predicate, sch,
+            return FilterOp(rec(n.child, cap), n.predicate, sch,
                             stats_probe=_semantic_probe(n))
         if isinstance(n, Project):
-            return ProjectOp(rec(n.child), n.exprs, sch)
+            return ProjectOp(rec(n.child, cap), n.exprs, sch)
         if isinstance(n, Join):
             if n.kind == "cross" or not n.left_keys:
                 return CrossJoinOp(rec(n.left), rec(n.right), n.extra,
@@ -720,19 +762,20 @@ def lower(node: Node, cat, predict_factory: Callable, chunk_size: int,
         if isinstance(n, OrderBy):
             return OrderByOp(rec(n.child), n.keys, chunk_size, sch)
         if isinstance(n, Limit):
-            return LimitOp(rec(n.child), n.n, sch)
+            tighter = n.n if cap is None else min(cap, n.n)
+            return LimitOp(rec(n.child, tighter), n.n, sch)
         if isinstance(n, Predict):
             if n.child is None:
                 return PredictScanOp(n.info, predict_factory, absorber, sch)
-            return PredictOp(rec(n.child), n.info, predict_factory,
+            return PredictOp(rec(n.child, cap), n.info, predict_factory,
                              absorber, sch)
         if isinstance(n, SemanticJoin):
-            window = chunk_size
+            window = _eff_chunk(cap)
             est = n.info.options.get("est_cross_rows")
             if est is not None and np.isfinite(est):
                 # never fragment below a useful floor; only shrink the
                 # window when the estimate says the cross product is small
-                window = min(chunk_size, max(256, int(math.ceil(est))))
+                window = min(window, max(256, int(math.ceil(est))))
             probe = (stats_store, stats_key(n.info)) \
                 if stats_store is not None else None
             return SemanticJoinOp(rec(n.left), rec(n.right), n.info,

@@ -83,6 +83,65 @@ class LatencyScriptedPredictor(Predictor):
                 for p, nr, r in zip(prompts, num_rows_list, rows_list)]
 
 
+def drain_stream(stream):
+    """Collect one QueryStream: returns (rows, ExecStats).  Rows come out
+    in chunk order, so equal inputs must produce byte-equal lists."""
+    rows = []
+    for chunk in stream.chunks():
+        rows.extend(chunk.rows())
+    return rows, stream.stats
+
+
+def stream_stats_dict(stats) -> dict:
+    """ExecStats as a comparable dict: drop wall_s (real time, the one
+    honest nondeterminism) — everything else must match exactly across
+    interleavings and worker counts."""
+    import dataclasses as _dc
+    d = _dc.asdict(stats)
+    d.pop("wall_s")
+    return d
+
+
+def run_sessions(db, queries, *, concurrent: bool, start_barrier=None):
+    """Multi-session determinism harness: run one `db.stream` per entry of
+    `queries` ([(tenant, sql), ...]) either serially (submission order) or
+    on N threads released together (plus `start_barrier`, if given, as an
+    extra alignment hook for worst-case interleavings).  Returns the
+    per-query list of (rows, stats_dict) in QUERY order regardless of
+    completion order — the serial and concurrent return values of
+    identical workloads must compare equal."""
+    outcomes = [None] * len(queries)
+
+    def one(i, tenant, sql):
+        rows, stats = drain_stream(db.stream(sql, tenant=tenant))
+        outcomes[i] = (rows, stream_stats_dict(stats))
+
+    if not concurrent:
+        for i, (tenant, sql) in enumerate(queries):
+            one(i, tenant, sql)
+        return outcomes
+    errors = []
+
+    def runner(i, tenant, sql):
+        try:
+            if start_barrier is not None:
+                start_barrier.wait(timeout=10)
+            one(i, tenant, sql)
+        except BaseException as e:      # surfaced to the caller
+            errors.append(e)
+
+    threads = [threading.Thread(target=runner, args=(i, t, q),
+                                name=f"session-{i}")
+               for i, (t, q) in enumerate(queries)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    if errors:
+        raise errors[0]
+    return outcomes
+
+
 def register_scripted(db, model_name: str, predictor: Predictor) -> None:
     """Bind a (usually shared) predictor instance to a model name through
     the custom-executor registry, so scripted backends run the full SQL

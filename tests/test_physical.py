@@ -201,6 +201,45 @@ def test_limit_early_exit_saves_llm_calls():
     assert r.stats.llm_calls == 3      # exactly the limit, not all 40 rows
 
 
+def test_limit_caps_chunks_and_cancels_queued_windows():
+    """Early-exit Limit must not over-compute: the Limit caps its streaming
+    subtree's chunk size (LIMIT 3 over 500 rows pulls 64-row windows, not
+    one 2048-row chunk), and when the limit is satisfied the still-queued
+    window of the upstream PredictOp is cancelled before any flush
+    dispatches it.  The scripted backend's dispatch_log is the spy:
+    dispatched calls stay bounded by ~one window and stop growing the
+    moment the limit is hit."""
+    import time as _time
+
+    from helpers import LatencyScriptedPredictor, register_scripted
+    db = IPDB()
+    n = 500
+    db.register_table("big", Table.from_rows(
+        [{"a": i, "txt": f"r{i}"} for i in range(n)]))
+    pred = LatencyScriptedPredictor(clean_oracle, base_latency_s=0.1)
+    register_scripted(db, "spy", pred)
+    db.set_option("use_batching", False)
+    db.set_option("use_dedup", False)
+    db.set_option("inflight_windows", 2)    # window 2 submitted, not needed
+    db.set_option("max_dispatch_calls", 8)  # sliced flush leaves it queued
+    r = db.sql("SELECT a, LLM spy (PROMPT 'x {tag VARCHAR} of {{txt}}') "
+               "AS t FROM big LIMIT 3")
+    assert len(r.table) == 3
+    calls = sum(b for _, b in pred.dispatch_log)
+    # one capped window (max(LIMIT_CHUNK_FLOOR, 3) = 64) plus at most one
+    # dispatch slice of spillover — nowhere near the 500-row input or even
+    # the two 64-row windows that were submitted
+    assert calls <= 64 + 8, calls
+    assert calls < n // 4
+    # the cancelled window's requests are gone, not parked: nothing is
+    # queued and the dispatch log never grows again
+    assert db.inference_service.pending == 0
+    seen = len(pred.dispatch_log)
+    db.inference_service.flush()
+    _time.sleep(0.02)
+    assert len(pred.dispatch_log) == seen
+
+
 def test_hash_join_matches_nested_loop_reference():
     rng = np.random.default_rng(7)
     l_rows = [{"k": int(rng.integers(0, 5)), "j": f"x{int(rng.integers(0, 3))}",

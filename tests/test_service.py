@@ -5,6 +5,7 @@ import json
 
 import pytest
 
+from repro.core.cancel import QueryCancelled
 from repro.core.database import IPDB
 from repro.core.executors import CallResult, Predictor
 from repro.core.service import (InferenceRequest, InferenceService,
@@ -31,11 +32,11 @@ class CountingExecutor(Predictor):
                 for p, nr in zip(prompts, num_rows_list)]
 
 
-def _req(ex, prompt, *, instruction="i", dedup=True):
+def _req(ex, prompt, *, instruction="i", dedup=True, session="", tenant=""):
     return InferenceRequest(
         model_name="m", instruction=instruction, prompt=prompt,
         schema=(("x", "INTEGER"),), num_rows=1, executor=ex,
-        dedup=dedup)
+        dedup=dedup, session=session, tenant=tenant)
 
 
 def test_submit_flush_batches_one_queue():
@@ -136,6 +137,124 @@ def test_cancel_is_refcounted_with_joiners():
     assert svc.pending == 0
     svc.flush()
     assert ex.batches == []            # nothing was dispatched
+
+
+def test_shared_handle_one_cancel_other_resolves_one_dispatch():
+    """Refcount regression (the PR 8 edge): a handle joined by in-flight
+    dedup must survive one submitter cancelling while the other still
+    waits — the survivor gets a real result from exactly one dispatched
+    call, and a late duplicate cancel cannot strip its reference."""
+    svc = InferenceService()
+    ex = CountingExecutor()
+    h1, _ = svc.submit_one(_req(ex, "shared"))
+    h2, o2 = svc.submit_one(_req(ex, "shared"))
+    assert h2 is h1 and not o2 and h1.refs == 2
+    assert not svc.cancel(h1)          # submitter A unwinds early
+    assert h1.refs == 1                # joiner's reference survives
+    assert h2.result().text            # submitter B still resolves
+    assert ex.batches == [1]           # exactly one dispatched call
+    assert not svc.cancel(h2)          # late cancel on a done handle: no-op
+    assert h1.refs == 1                # and no underflow below the floor
+
+
+def test_sessions_never_share_handles_and_cancel_is_isolated():
+    """Two sessions submitting the byte-identical prompt must NOT join:
+    the session tag is part of the dedup key precisely so cancelling one
+    session can never strip a handle another session is waiting on."""
+    svc = InferenceService()
+    ex = CountingExecutor()
+    ha, oa = svc.submit_one(_req(ex, "same", session="sA"))
+    hb, ob = svc.submit_one(_req(ex, "same", session="sB"))
+    assert oa and ob and ha is not hb
+    assert svc.cancel_session("sA") == 1
+    with pytest.raises(QueryCancelled):
+        ha.result()
+    assert hb.result().text            # session B untouched
+    assert ex.batches == [1]
+    assert svc.session_pending("sA") == 0
+    svc.release_session("sA")
+
+
+def test_cancel_after_session_force_fail_never_underflows():
+    """cancel_session force-fails queued handles (refs -> 0); the owning
+    pipeline then unwinds and calls cancel() on the same handles.  That
+    late cancel must be a no-op — not an underflow that could corrupt a
+    later joiner's refcount."""
+    svc = InferenceService()
+    ex = CountingExecutor()
+    h, _ = svc.submit_one(_req(ex, "p", session="s1"))
+    assert svc.cancel_session("s1") == 1
+    assert h.refs == 0 and h.done
+    assert not svc.cancel(h)           # unwinding pipeline's late cancel
+    assert h.refs == 0                 # floored, no -1
+    # tombstone: resubmits for the cancelled session fail fast...
+    with pytest.raises(QueryCancelled):
+        svc.submit_one(_req(ex, "p2", session="s1"))
+    # ...until the session is released, after which the tag is reusable
+    svc.release_session("s1")
+    h2, _ = svc.submit_one(_req(ex, "p2", session="s1"))
+    assert h2.result().text
+
+
+def test_cancel_session_wakes_lane_blocked_waiter():
+    """A handle scheduled onto a full worker lane (so its submitter waits
+    on the dispatch event) must be woken with QueryCancelled — and its
+    never-started lane task dropped — when its session is cancelled from
+    another thread, without waiting for the running batches."""
+    import threading as _t
+
+    class Gated(CountingExecutor):
+        def __init__(self, gate):
+            super().__init__()
+            self.options = {"dispatch_workers": 2}
+            self.max_concurrency = 2
+            self.gate = gate
+            self.started = []
+            self._slock = _t.Lock()
+
+        def complete_many(self, prompts, *a, **kw):
+            with self._slock:
+                self.started.append(list(prompts))
+            assert self.gate.wait(timeout=10)
+            return super().complete_many(prompts, *a, **kw)
+
+    gate = _t.Event()
+    svc = InferenceService()
+    ex = Gated(gate)
+    # two untagged batches fill both lane workers; the tagged request is
+    # scheduled third and stays in lane.pending, never started
+    svc.submit_one(_req(ex, "g1", instruction="i1"))
+    svc.submit_one(_req(ex, "g2", instruction="i2"))
+    h_queued, _ = svc.submit_one(_req(ex, "victim", instruction="i3",
+                                      session="s2"))
+    svc.flush()                        # schedules all three on the lane
+    deadline = 250
+    while len(ex.started) < 2 and deadline:    # both workers gate-blocked
+        deadline -= 1
+        _t.Event().wait(0.02)
+    assert len(ex.started) == 2
+    outcome = {}
+
+    def waiter():
+        try:
+            outcome["res"] = h_queued.result()
+        except BaseException as e:
+            outcome["err"] = e
+
+    t = _t.Thread(target=waiter)
+    t.start()
+    t.join(timeout=0.2)
+    assert t.is_alive()                # parked on the dispatch event
+    dropped = svc.cancel_session("s2")
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert dropped == 1
+    assert isinstance(outcome.get("err"), QueryCancelled)
+    gate.set()                         # release the running batches
+    svc.wait_idle(timeout=5)
+    assert [sorted(p)[0] for p in ex.started] == ["g1", "g2"]  # never ran
+    svc.release_session("s2")
+    svc.shutdown()
 
 
 def test_separate_instructions_separate_batches_and_max_dispatch():
