@@ -35,6 +35,7 @@ MODULES = [
     ("prefix_paging", "benchmarks.bench_prefix_paging"),
     ("cascade", "benchmarks.bench_cascade"),
     ("frontdoor", "benchmarks.bench_frontdoor"),
+    ("rewrite", "benchmarks.bench_rewrite"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -25,6 +25,7 @@ from repro.core.executors import (JaxExecutor, OracleExecutor, Predictor,
                                   TabularExecutor)
 from repro.core.optimizer import DEFAULT_FLAGS, Optimizer
 from repro.core.predict import PredictOperator, PromptCache
+from repro.core.rewrite import rewrites_section
 from repro.core.service import InferenceService
 from repro.core.stats import (CostModel, PilotSampler, StatisticsStore,
                               stats_section)
@@ -297,9 +298,9 @@ class IPDB:
                                                     True))
             svc.cost_model = CostModel(self.stats_store, self.options)
             pilot = self._make_pilot()
-            plan = Optimizer(self.catalog, self.options,
-                             stats=self.stats_store,
-                             pilot=pilot).optimize(plan)
+            opt = Optimizer(self.catalog, self.options,
+                            stats=self.stats_store, pilot=pilot)
+            plan = opt.optimize(plan)
         extra = {"tenant": tenant, "session": tag}
         factory = lambda info: self._predict_factory(info, extra)  # noqa: E731
         ex = PlanExecutor(self.catalog, factory,
@@ -310,7 +311,9 @@ class IPDB:
                      + ex.physical_plan(plan) + "\n-- dispatch --\n"
                      + self._dispatch_repr() + "\n-- stats --\n"
                      + self._stats_repr(plan) + "\n-- cascade --\n"
-                     + self._cascade_repr(plan)) if explain else None
+                     + self._cascade_repr(plan) + "\n-- rewrites --\n"
+                     + rewrites_section(opt.rewrite_events)) \
+            if explain else None
         return QueryStream(self, plan, ex, scope, tag, tenant, plan_text,
                            pilot, t0)
 
@@ -377,8 +380,9 @@ class IPDB:
         plan = Binder(self.catalog, self.options).bind_select(stmt)
         # no pilot sampling from EXPLAIN: explaining must stay side-effect
         # free; estimates use whatever the store has already observed
-        opt = Optimizer(self.catalog, self.options,
-                        stats=self.stats_store).optimize(plan)
+        optimizer = Optimizer(self.catalog, self.options,
+                              stats=self.stats_store)
+        opt = optimizer.optimize(plan)
         ex = PlanExecutor(self.catalog, self._predict_factory,
                           chunk_size=int(self.options.get("chunk_size", 2048)))
         return ("-- logical --\n" + plan_repr(plan)
@@ -386,7 +390,9 @@ class IPDB:
                 + "\n-- physical --\n" + ex.physical_plan(opt)
                 + "\n-- dispatch --\n" + self._dispatch_repr()
                 + "\n-- stats --\n" + self._stats_repr(opt)
-                + "\n-- cascade --\n" + self._cascade_repr(opt))
+                + "\n-- cascade --\n" + self._cascade_repr(opt)
+                + "\n-- rewrites --\n"
+                + rewrites_section(optimizer.rewrite_events))
 
     def _run_select(self, stmt: SelectStmt, explain: bool) -> QueryResult:
         t0 = time.time()
@@ -400,8 +406,9 @@ class IPDB:
         # drives the service's smallest-makespan-first flush ordering
         svc.cost_model = CostModel(self.stats_store, self.options)
         pilot = self._make_pilot()
-        plan = Optimizer(self.catalog, self.options, stats=self.stats_store,
-                         pilot=pilot).optimize(plan)
+        opt = Optimizer(self.catalog, self.options, stats=self.stats_store,
+                        pilot=pilot)
+        plan = opt.optimize(plan)
         ex = PlanExecutor(self.catalog, self._predict_factory,
                           chunk_size=int(self.options.get("chunk_size", 2048)),
                           stats_store=self.stats_store)
@@ -412,6 +419,11 @@ class IPDB:
                      + self._cascade_repr(plan)) if explain else None
         before = dataclasses.replace(svc.stats)
         table = ex.run(plan)
+        if plan_text is not None:
+            # the rewrites section closes the report AFTER execution so it
+            # can include the mid-query re-ranks the stack operators made
+            plan_text += "\n-- rewrites --\n" + rewrites_section(
+                opt.rewrite_events, ex.rerank_log)
         st = ex.stats
         st.dispatch_batches = svc.stats.dispatch_batches \
             - before.dispatch_batches

@@ -39,6 +39,8 @@ DEFAULT_FLAGS = {
     "enable_merge": True,
     "enable_select_order": True,
     "enable_cascade": True,
+    "enable_rewrites": True,    # learned rewrite-pattern engine
+    "enable_reopt": True,       # mid-query re-ranking of select stacks
 }
 
 
@@ -80,9 +82,11 @@ class Optimizer:
             CostModel(self.stats, self.session)
         self.pilot = pilot
         self._filter_used = set()
+        self.rewrite_events = []    # RewriteEvents from the last optimize()
 
     # ------------------------------------------------------------------
     def optimize(self, plan: Node) -> Node:
+        self.rewrite_events = []
         plan = self._split_filters(plan)
         # outputs referenced by Filters = selective predicts.  Computed for
         # EVERY rule pass (merge uses it to avoid fusing two highly
@@ -99,6 +103,16 @@ class Optimizer:
                 if new is plan:
                     break
                 plan = new
+        if self.flags["enable_rewrites"]:
+            # learned rewrite patterns (subsumption, duplicate-predict
+            # consolidation, select-vs-join placement) run after pushdown
+            # has formed the interleaved select units; every application
+            # passes the engine's validation gate and is recorded for
+            # EXPLAIN's `-- rewrites --` section
+            from repro.core.rewrite import RewriteEngine
+            eng = RewriteEngine(self.cat, self.cost, ctx=self)
+            plan = eng.rewrite(plan)
+            self.rewrite_events = eng.events
         if self.flags["enable_join_order"]:
             plan = self._semantic_select_vs_join(plan)
         if self.flags["enable_select_order"]:
@@ -436,9 +450,23 @@ class Optimizer:
                     self.pilot.calibrate(f.predicate, p.info, base_t)
         ranked = sorted(units, key=lambda fp: self.cost.rank(
             fp[1].info, self._fallback_tokens(fp[1])))
+        # the legality conditions above (predicates self-contained, inputs
+        # from the base schema) are exactly what mid-query re-ranking needs,
+        # so stamp each unit with its modeled per-call cost and the planner's
+        # selectivity estimate; lowering turns a stamped stack into one
+        # SemanticSelectStackOp that re-ranks on observed chunk pass rates
+        reopt = bool(self.flags.get("enable_reopt", True))
         plan = cur
         for f, p in ranked:                 # cheapest wraps first → innermost
-            plan = Filter(Predict(plan, p.info), f.predicate, f.selectivity)
+            info = p.info
+            if reopt:
+                sel, _ = self.cost.selectivity(info)
+                _, _, lat = self.cost.per_call(
+                    info, self._fallback_tokens(p))
+                info = dataclasses.replace(info, options={
+                    **info.options, "reopt": True,
+                    "reopt_cost": float(lat), "reopt_sel": float(sel)})
+            plan = Filter(Predict(plan, info), f.predicate, f.selectivity)
         return plan
 
     # -- pass: stats-informed selectivity annotation -----------------------
@@ -468,9 +496,17 @@ def _walk(n: Node):
 
 
 def _find_base_column(plan: Node, col: str, cat) -> Optional[np.ndarray]:
+    """Column values from the unique base table carrying `col`.  Under a
+    join of tables that share a column name, the owner is ambiguous from
+    the logical plan alone — return None (callers fall back to a default
+    width) instead of sizing prompts from whichever Scan happens to walk
+    first.  A self-join (same table twice) is not ambiguous."""
+    owners: Dict[str, np.ndarray] = {}
     for x in _walk(plan):
-        if isinstance(x, Scan):
+        if isinstance(x, Scan) and x.table not in owners:
             t = cat.table(x.table)
             if col in t.cols:
-                return t.column(col)
+                owners[x.table] = t.column(col)
+    if len(owners) == 1:
+        return next(iter(owners.values()))
     return None

@@ -272,7 +272,17 @@ class PredictOperator:
         # cross-query prompt-cache namespace, and their dispatch
         # accounting records under the staged stats key
         self._stage = str(getattr(executor, "stats_stage", "") or "")
-        self._ns = (info.model_name, self._instruction()) + \
+        # the namespace must cover every option that changes the *answer*
+        # for the same (model, instruction, input): n_samples majority
+        # voting, sampling temperature, token/string budgets, and the
+        # table-generation row budget.  Batching/slot/window options shape
+        # dispatch, not answers, and stay out so they keep sharing entries.
+        shaping = tuple(
+            (k, opts.get(k, d)) for k, d in (
+                ("n_samples", 1), ("temperature", 0.7),
+                ("max_tokens", 4096), ("max_str", 24), ("gen_rows", 4))
+            if opts.get(k, d) != d)
+        self._ns = (info.model_name, self._instruction()) + shaping + \
             ((self._stage,) if self._stage else ())
         self.stats = PredictStats()
         # adaptive statistics: calls/tokens/latency are recorded by the

@@ -39,8 +39,10 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import heapq
 import math
 import threading
+from collections import deque
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -63,6 +65,10 @@ def stats_key(info) -> Tuple[str, str]:
     return (info.model_name, instr)
 
 
+#: chunk-level predicate records kept in the sliding recency window
+_RECENT_WINDOW = 32
+
+
 @dataclasses.dataclass
 class PredicateStats:
     """Accumulated observations for one (model, instruction) key."""
@@ -76,12 +82,28 @@ class PredicateStats:
     fallbacks: int = 0
     pilot_calls: int = 0      # subset of `calls` made by pilot sampling
     pilot_rows: int = 0       # subset of `rows_in` observed by pilots
+    # sliding window of the last `_RECENT_WINDOW` (rows_in, rows_passed)
+    # chunk records: the decayed view the rewrite engine / mid-query
+    # re-ranker consults so drifting data cannot pin a stale order.  The
+    # lifetime `selectivity` stays the planner's deterministic default —
+    # windowed reads are opt-in (window content depends on record order,
+    # which concurrent sessions interleave).
+    recent: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=_RECENT_WINDOW))
 
     @property
     def selectivity(self) -> Optional[float]:
         if self.rows_in <= 0:
             return None
         return self.rows_passed / self.rows_in
+
+    @property
+    def windowed_selectivity(self) -> Optional[float]:
+        """Pass rate over the recency window only (None when empty)."""
+        rin = sum(r for r, _ in self.recent)
+        if rin <= 0:
+            return None
+        return sum(p for _, p in self.recent) / rin
 
     @property
     def mean_in_tokens(self) -> Optional[float]:
@@ -127,12 +149,17 @@ class CascadeStats:
       * routing counters (rows routed/escalated, per-stage calls, audit
         agreement), all order-independent sums.
     """
-    __slots__ = ("reservoir", "hist_pos", "hist_neg", "routed_rows",
+    __slots__ = ("reservoir", "_heap", "hist_pos", "hist_neg", "routed_rows",
                  "escalated_rows", "proxy_calls", "expensive_calls",
                  "audited", "audit_agree")
 
     def __init__(self):
         self.reservoir: Dict[int, Tuple[float, bool, bool]] = {}
+        # max-heap over the reservoir keys (stored negated): capacity
+        # eviction pops the current largest hash in O(log n) instead of
+        # re-sorting the whole reservoir under the lock on every insert.
+        # Invariant: _heap holds exactly the reservoir's keys, once each.
+        self._heap: List[int] = []
         self.hist_pos = np.zeros(_CASCADE_BINS, np.int64)
         self.hist_neg = np.zeros(_CASCADE_BINS, np.int64)
         self.routed_rows = 0
@@ -242,6 +269,7 @@ class StatisticsStore:
         with self._lock:
             rec.rows_in += int(rows_in)
             rec.rows_passed += int(rows_passed)
+            rec.recent.append((int(rows_in), int(rows_passed)))
             if pilot:
                 rec.pilot_rows += int(rows_in)
 
@@ -276,15 +304,25 @@ class StatisticsStore:
         the reservoir converges to the same set regardless of the order
         concurrent workers record in."""
         rec = self.cascade_entry(key)
+        h = int(row_hash)
+        val = (float(conf), bool(verdict), bool(agree))
         with self._lock:
             if audited:
                 rec.audited += 1
                 rec.audit_agree += int(bool(agree))
-            rec.reservoir[int(row_hash)] = (float(conf), bool(verdict),
-                                            bool(agree))
-            if len(rec.reservoir) > _CASCADE_RESERVOIR:
-                for h in sorted(rec.reservoir)[_CASCADE_RESERVOIR:]:
-                    del rec.reservoir[h]
+            if h in rec.reservoir:
+                rec.reservoir[h] = val          # update in place, heap keeps h
+            elif len(rec.reservoir) < _CASCADE_RESERVOIR:
+                rec.reservoir[h] = val
+                heapq.heappush(rec._heap, -h)
+            elif h < -rec._heap[0]:
+                # smaller than the current max hash: the max is the record
+                # the old sort-everything pass would have dropped
+                evicted = -heapq.heapreplace(rec._heap, -h)
+                del rec.reservoir[evicted]
+                rec.reservoir[h] = val
+            # else: h exceeds every retained hash — dropped on arrival,
+            # exactly as insert-then-trim discarded it
 
     def record_cascade_batch(self, key, rows: int, escalated: int,
                              proxy_calls: int, expensive_calls: int) -> None:

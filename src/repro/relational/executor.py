@@ -57,6 +57,9 @@ class ExecStats:
     # front-door session accounting (zero for the plain Python API)
     cancelled: bool = False         # query ended by its CancelScope
     cancelled_requests: int = 0     # queued service requests dropped
+    # mid-query re-optimization: times a SemanticSelectStackOp re-ranked
+    # its remaining units on observed chunk selectivities
+    reranks: int = 0
 
     @property
     def tokens(self) -> int:
@@ -74,6 +77,9 @@ class PlanExecutor:
         self.stats_store = stats_store
         self.cancel_scope = cancel_scope
         self.stats = ExecStats()
+        # human-readable re-rank decisions (one line each) from stack
+        # operators; EXPLAIN's `-- rewrites --` section appends them
+        self.rerank_log = []
 
     # ------------------------------------------------------------------
     def run(self, plan: Node) -> Table:
@@ -134,3 +140,8 @@ class PlanExecutor:
         self.stats.escalated_calls += s.escalated_calls
         self.stats.cascade_rows += s.cascade_rows
         self.stats.escalated_rows += s.escalated_rows
+
+    def _note_reranks(self, count: int, lines) -> None:
+        """Called once per SemanticSelectStackOp when it closes."""
+        self.stats.reranks += int(count)
+        self.rerank_log.extend(lines)

@@ -24,6 +24,11 @@ Operator inventory:
                             keeps up to `inflight_windows` chunks submitted
                             to the inference service ahead of resolution
   PredictScanOp             table generation (rho^s, LLM-as-scan)
+  SemanticSelectStackOp     >=2 reorderable semantic selects executed as
+                            one operator: after every chunk the remaining
+                            units are re-ranked on the pass rates observed
+                            *inside this query*, so drifting data cannot
+                            pin the optimizer's stale static order
   SemanticJoinOp            STREAMING block-nested-loop semantic join: the
                             cross product is produced window-by-window
                             (peak intermediate <= window rows, never
@@ -586,6 +591,135 @@ class PredictOp(PhysicalOp):
         return f"Predict[{self.info.model_name}] out={self.info.out_cols}{e}"
 
 
+#: chunks of per-unit (rows_in, rows_passed) records the stack operator
+#: ranks from — a recency window, not lifetime sums, so a selectivity that
+#: DRIFTS mid-stream overturns the stale order within a few chunks
+#: (mirrors PredicateStats.recent in the shared store)
+_REOPT_WINDOW = 4
+
+
+class _StackUnit:
+    """One semantic-select unit inside a SemanticSelectStackOp."""
+
+    __slots__ = ("info", "predicate", "key", "cost", "init_sel", "recent")
+
+    def __init__(self, info: PredictInfo, predicate, key):
+        self.info = info
+        self.predicate = predicate
+        self.key = key                  # stats-store key (None = no store)
+        self.cost = float(info.options.get("reopt_cost", 1.0))
+        self.init_sel = float(info.options.get("reopt_sel", 0.5))
+        self.recent: List[Tuple[int, int]] = []   # (rows_in, rows_passed)
+
+    def label(self) -> str:
+        return f"{self.info.model_name}:{self.info.out_cols[0]}"
+
+    def observe(self, rows_in: int, rows_passed: int) -> None:
+        self.recent.append((rows_in, rows_passed))
+        if len(self.recent) > _REOPT_WINDOW:
+            del self.recent[0]
+
+    def observed_sel(self) -> float:
+        rin = sum(r for r, _ in self.recent)
+        if rin > 0:
+            return sum(p for _, p in self.recent) / rin
+        return self.init_sel
+
+
+class SemanticSelectStackOp(PhysicalOp):
+    """Mid-query re-optimization of a commuting semantic-select stack.
+
+    The optimizer stamps stacks whose legality it has proven (every unit's
+    predicate depends only on its own predict outputs plus base columns)
+    with `reopt` markers; lowering collapses such a stack into this single
+    operator.  Each input chunk flows through the units in the CURRENT
+    order; after the chunk, the order is re-ranked by cost/(1 - sel) using
+    the pass rates observed over the last `_REOPT_WINDOW` chunks (falling
+    back to the planner's estimate for units with no local observations
+    yet) — windowed, not cumulative, so a drift mid-stream overturns the
+    stale order within a few chunks.  Only local observations feed the
+    ranking — shared-store reads mid-query would make results depend on
+    concurrent queries.
+
+    Reordering commutes (conjunctive selects over the same base rows) and
+    output columns are re-projected to the declared schema, so emitted
+    rows are byte-identical to any fixed order.  Units run synchronously
+    per chunk: a unit's pass mask must resolve before the next unit sees
+    its survivors, and the chunk's observations feed the next re-rank."""
+    name = "SemanticSelectStack"
+
+    def __init__(self, child: PhysicalOp, units: List[_StackUnit],
+                 predict_factory, absorber, stats_store, out_schema):
+        super().__init__(out_schema)
+        self.child = child
+        self.units = units              # execution order: innermost first
+        self.predict_factory = predict_factory
+        self.absorber = absorber
+        self.stats_store = stats_store
+        self.children = [child]
+        self.reranks = 0
+        self.rerank_log: List[str] = []
+
+    def _rank_order(self) -> List[int]:
+        from repro.core.stats import order_rank
+        return sorted(
+            range(len(self.units)),
+            key=lambda i: (order_rank(self.units[i].cost,
+                                      self.units[i].observed_sel()), i))
+
+    def _produce(self):
+        ops = [self.predict_factory(u.info) for u in self.units]
+        order = list(range(len(self.units)))
+        chunk_no = 0
+        try:
+            for c in self.child.chunks():
+                chunk_no += 1
+                cur = c
+                for i in order:
+                    if len(cur) == 0:
+                        break
+                    u, op = self.units[i], ops[i]
+                    out = op.resolve(op.submit(cur))
+                    mask = np.asarray(u.predicate.evaluate(out), bool)
+                    passed = int(mask.sum())
+                    if self.stats_store is not None and u.key is not None \
+                            and len(out):
+                        self.stats_store.record_predicate(
+                            u.key, len(out), passed)
+                    if len(out):
+                        u.observe(len(out), passed)
+                    cur = out.mask(mask)
+                if len(cur):
+                    # later units append their columns in execution order;
+                    # re-project to the declared schema so emitted rows are
+                    # identical no matter how the stack was ranked
+                    yield cur.select(list(self.out_schema))
+                new_order = self._rank_order()
+                if new_order != order:
+                    self.reranks += 1
+                    sels = ", ".join(
+                        f"{self.units[i].label()}="
+                        f"{self.units[i].observed_sel():.3f}"
+                        for i in new_order)
+                    self.rerank_log.append(
+                        f"chunk {chunk_no}: re-ranked to "
+                        f"[{' -> '.join(self.units[i].label() for i in new_order)}]"
+                        f" (observed {sels})")
+                    order = new_order
+        finally:
+            if self.absorber is not None:
+                for op in ops:
+                    self.absorber._absorb(op)
+                note = getattr(self.absorber, "_note_reranks", None)
+                if note is not None:
+                    note(self.reranks, list(self.rerank_log))
+
+    def describe(self):
+        labels = ", ".join(u.label() for u in self.units)
+        return (f"SemanticSelectStack[{labels}] "
+                f"(chunk-level re-rank on observed selectivity)")
+
+
 class PredictScanOp(PhysicalOp):
     """Table generation (rho^s): the model IS the scan."""
     name = "PredictScan"
@@ -730,6 +864,21 @@ def lower(node: Node, cat, predict_factory: Callable, chunk_size: int,
             return (stats_store, stats_key(n.child.info))
         return None
 
+    def _reopt_stack(n: Filter):
+        """([(Filter, Predict), ...] outermost-first, base) when `n` heads
+        a stack of >=2 semantic-select units the optimizer stamped as
+        reorderable (`reopt` marker); None otherwise."""
+        units = []
+        cur: Node = n
+        while (isinstance(cur, Filter) and isinstance(cur.child, Predict)
+               and cur.child.child is not None
+               and bool(cur.child.info.options.get("reopt"))):
+            units.append((cur, cur.child))
+            cur = cur.child.child
+        if len(units) < 2:
+            return None
+        return units, cur
+
     def _eff_chunk(cap: Optional[int]) -> int:
         if cap is None:
             return chunk_size
@@ -745,6 +894,14 @@ def lower(node: Node, cat, predict_factory: Callable, chunk_size: int,
         if isinstance(n, Scan):
             return ScanOp(cat.table(n.table), n.table, _eff_chunk(cap), sch)
         if isinstance(n, Filter):
+            stack = _reopt_stack(n)
+            if stack is not None:
+                units, base = stack
+                return SemanticSelectStackOp(
+                    rec(base, cap),
+                    [_StackUnit(p.info, f.predicate, stats_key(p.info))
+                     for f, p in reversed(units)],   # innermost runs first
+                    predict_factory, absorber, stats_store, sch)
             return FilterOp(rec(n.child, cap), n.predicate, sch,
                             stats_probe=_semantic_probe(n))
         if isinstance(n, Project):

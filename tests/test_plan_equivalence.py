@@ -10,7 +10,8 @@ from repro.core.database import IPDB
 from repro.relational.table import Table
 
 FLAGS = ("enable_pullup", "enable_join_order", "enable_merge",
-         "enable_select_order", "use_dedup", "use_batching")
+         "enable_select_order", "enable_rewrites", "enable_reopt",
+         "use_dedup", "use_batching")
 
 
 def build_db(rows, flags):
@@ -47,6 +48,12 @@ QUERIES = [
     # stacked semantic selects (ordering territory)
     "SELECT a FROM T WHERE LLM m (PROMPT 'c1 {flag BOOLEAN} of {{txt}}') "
     "= TRUE AND LLM m (PROMPT 'c2 {tag VARCHAR} of {{a}}') = 't0'",
+    # duplicate semantic subexpression (consolidation territory)
+    "SELECT a, LLM m (PROMPT 'get {tag VARCHAR} of {{txt}}') AS t1 FROM T "
+    "WHERE LLM m (PROMPT 'get {tag VARCHAR} of {{txt}}') = 't0'",
+    # implied predicate pair over identical predicts (subsumption territory)
+    "SELECT a FROM T WHERE LLM m (PROMPT 'chk {flag BOOLEAN} of {{txt}}') "
+    "= TRUE AND LLM m (PROMPT 'chk {flag BOOLEAN} of {{txt}}') = TRUE",
 ]
 
 
