@@ -1,0 +1,262 @@
+"""Fault-tolerance benchmark: chaos overhead, breaker load-shedding, and
+crash-safe warm-state restarts.
+
+Scenarios (all self-asserting, like bench_adaptive):
+
+  chaos_free / chaos_faulty
+      The same query fault-free vs under seeded transient chaos
+      (transient_rate=0.25, <30% of first-occurrence calls).  Rows must
+      be byte-identical — retries deterministically succeed — so the
+      scenario measures the pure retry overhead in extra backend calls.
+  outage_breaker
+      A full backend outage: every call raises.  The circuit breaker
+      sheds the flood after `failure_threshold` consecutive failures
+      (count-based probes keep re-checking), the query degrades to NULL
+      outputs instead of erroring, and the derived column reports how
+      many calls the breaker saved.
+  restart_cold / restart_warm
+      Cold start vs snapshot-restored start of the same database.  The
+      warm engine must serve its first query with ZERO backend calls —
+      every answer comes from the restored PromptCache — which is the
+      crash-recovery contract for the serving tier.
+  radix_cold / radix_warm
+      The paged jax engine's radix prefix tree exported to a snapshot
+      and restored into a fresh engine: the first generate() on the
+      restored engine must hit the tree (radix_hit_tokens > 0) and
+      prefill strictly fewer tokens than the cold engine, with
+      byte-identical outputs.
+
+Module-level ``COUNTERS`` aggregates injected-fault / retry / breaker
+counters for the run; benchmarks/run.py folds it into
+BENCH_results.json.
+"""
+import json
+import threading
+import time
+
+from repro.core.database import IPDB
+from repro.core.executors import CallResult, Predictor
+from repro.core.faults import FaultInjector
+from repro.relational.table import Table
+
+COUNTERS = {}
+
+QUERY = ("SELECT a, LLM m (PROMPT 'tag {tag VARCHAR} of {{txt}}') "
+         "AS t FROM T")
+
+
+def oracle(instruction, rows):
+    out = []
+    for r in rows:
+        try:
+            i = int(str(r.get("txt", "0")).split()[-1])
+        except ValueError:
+            i = 0
+        out.append({"tag": f"t{i % 5}"})
+    return out
+
+
+class BenchPredictor(Predictor):
+    """Deterministic per-row fake backend (one prompt per row, so the
+    fault injector's per-prompt decisions sample every row)."""
+    name = "bench-resilience"
+    max_concurrency = 8
+
+    def __init__(self):
+        self.options = {}
+        self.calls = 0
+        self._lock = threading.Lock()
+
+    def complete(self, prompt, schema, num_rows, *, shared_prefix="",
+                 rows=None, instruction=""):
+        answers = oracle(instruction, rows if rows else [{}])
+        objs = [{n: a.get(n) for n, _ in schema} for a in answers]
+        while len(objs) < num_rows:
+            objs.append({n: None for n, _ in schema})
+        text = json.dumps(objs[0] if num_rows == 1 else objs[:num_rows])
+        return CallResult(text, max(1, len(shared_prefix + prompt) // 4),
+                          max(1, len(text) // 4), 0.01, 0.0)
+
+    def complete_many(self, prompts, schema, num_rows_list, *,
+                      shared_prefix="", rows_list=None, instruction=""):
+        with self._lock:
+            self.calls += len(prompts)
+        rows_list = rows_list if rows_list is not None \
+            else [None] * len(prompts)
+        return [self.complete(p, schema, nr, shared_prefix=shared_prefix,
+                              rows=r, instruction=instruction)
+                for p, nr, r in zip(prompts, num_rows_list, rows_list)]
+
+
+def _db(n, *, predictor=None, snapshot_dir=None, **opts):
+    db = IPDB(snapshot_dir=snapshot_dir)
+    db.register_table("T", Table.from_rows(
+        [{"a": i, "txt": f"row {i}"} for i in range(n)]))
+    pred = predictor if predictor is not None else BenchPredictor()
+    db.register_executor("res", lambda entry: pred)
+    db.sql("CREATE LLM MODEL m PATH 'custom:res' ON PROMPT")
+    db.set_option("batch_size", 4)
+    db.set_option("enable_pilot", False)
+    for k, v in opts.items():
+        db.set_option(k, v)
+    return db, pred
+
+
+def _timed(db, query):
+    t0 = time.perf_counter()
+    res = db.sql(query)
+    return res, time.perf_counter() - t0
+
+
+def _chaos(n, rows_out):
+    db_free, _ = _db(n)
+    with db_free:
+        ref, wall_free = _timed(db_free, QUERY)
+    inj = FaultInjector(BenchPredictor(), seed=7, transient_rate=0.25)
+    db_chaos, _ = _db(n, predictor=inj)
+    with db_chaos:
+        got, wall_chaos = _timed(db_chaos, QUERY)
+    if got.table.rows() != ref.table.rows():
+        raise AssertionError("chaos run diverged from the fault-free run")
+    if inj.counters["transient"] == 0:
+        raise AssertionError("chaos harness injected no faults")
+    if got.stats.transient_retries < inj.counters["transient"]:
+        raise AssertionError("injected transients were not all retried")
+    COUNTERS["injected_transient"] = inj.counters["transient"]
+    COUNTERS["transient_retries"] = got.stats.transient_retries
+    for name, r, wall in (("chaos_free", ref, wall_free),
+                          ("chaos_faulty", got, wall_chaos)):
+        s = r.stats
+        rows_out.append((
+            f"resilience.{name}",
+            round(wall / max(1, s.llm_calls) * 1e6, 1),
+            f"calls={s.llm_calls};retries={s.transient_retries};"
+            f"rows={len(r.table)};wall_ms={wall * 1e3:.1f}"))
+
+
+def _outage(n, rows_out):
+    inj = FaultInjector(BenchPredictor(), seed=0, outage=(0, 10**9))
+    db, _ = _db(n, predictor=inj, retry_limit=1,
+                breaker_threshold=3, breaker_probe_every=8)
+    with db:
+        res, wall = _timed(db, QUERY)
+        snap = db.inference_service.breaker_for("m").snapshot()
+    if any(r["t"] is not None for r in res.table.rows()):
+        raise AssertionError("outage must degrade every answer to NULL")
+    if snap["opens"] < 1:
+        raise AssertionError("outage never tripped the breaker")
+    if res.stats.breaker_rejections == 0:
+        raise AssertionError("open breaker shed no calls")
+    COUNTERS["breaker_opens"] = snap["opens"]
+    COUNTERS["breaker_rejections"] = res.stats.breaker_rejections
+    COUNTERS["outage_calls_attempted"] = inj.counters["calls"]
+    rows_out.append((
+        "resilience.outage_breaker",
+        round(wall / max(1, n) * 1e6, 1),
+        f"attempted={inj.counters['calls']};"
+        f"shed={res.stats.breaker_rejections};opens={snap['opens']};"
+        f"rows={len(res.table)};wall_ms={wall * 1e3:.1f}"))
+
+
+def _restart(n, rows_out):
+    import shutil
+    import tempfile
+    snapdir = tempfile.mkdtemp(prefix="ipdb-bench-snap-")
+    try:
+        cold_inj = FaultInjector(BenchPredictor(), seed=0)
+        db_cold, _ = _db(n, predictor=cold_inj, snapshot_dir=snapdir)
+        with db_cold:
+            ref, wall_cold = _timed(db_cold, QUERY)
+            db_cold.save_snapshot()
+        warm_inj = FaultInjector(BenchPredictor(), seed=0)
+        db_warm, _ = _db(n, predictor=warm_inj, snapshot_dir=snapdir)
+        if db_warm.restored_snapshot is None:
+            raise AssertionError("restart did not restore the snapshot")
+        with db_warm:
+            got, wall_warm = _timed(db_warm, QUERY)
+        if warm_inj.counters["calls"] != 0:
+            raise AssertionError(
+                f"warm restart made {warm_inj.counters['calls']} backend "
+                f"calls — expected 0 (all answers from the PromptCache)")
+        if got.stats.prompt_cache_hits != n:
+            raise AssertionError("warm restart missed the prompt cache")
+        if got.table.rows() != ref.table.rows():
+            raise AssertionError("warm restart changed the rows")
+        COUNTERS["warm_restart_backend_calls"] = warm_inj.counters["calls"]
+        COUNTERS["warm_restart_cache_hits"] = got.stats.prompt_cache_hits
+        for name, r, wall, calls in (
+                ("restart_cold", ref, wall_cold, cold_inj.counters["calls"]),
+                ("restart_warm", got, wall_warm, warm_inj.counters["calls"])):
+            rows_out.append((
+                f"resilience.{name}",
+                round(wall / max(1, n) * 1e6, 1),
+                f"backend_calls={calls};"
+                f"cache_hits={r.stats.prompt_cache_hits};"
+                f"rows={len(r.table)};wall_ms={wall * 1e3:.1f}"))
+    finally:
+        shutil.rmtree(snapdir, ignore_errors=True)
+
+
+def _radix_restart(quick, rows_out):
+    import repro.configs as C
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.grammar import Field, JsonGrammar
+
+    cfg = C.get_smoke_config("olmo-1b").replace(vocab_size=259,
+                                                compute_dtype="float32")
+    mk = lambda: InferenceEngine(cfg, seed=0, max_len=512,  # noqa: E731
+                                 kv_layout="paged", page_size=32)
+    prefix = ("SHARED INSTRUCTION BLOCK: extract the field from the row. "
+              * 3)
+    g = JsonGrammar([Field("x", "INTEGER")])
+    n = 3 if quick else 6
+    prompts = [f"row {i}: value {i * 7}" for i in range(n)]
+    cold = mk()
+    t0 = time.perf_counter()
+    r_cold = cold.generate(prompts, grammar=g, shared_prefix=prefix,
+                           max_new_tokens=24)
+    wall_cold = time.perf_counter() - t0
+    state = cold.export_radix_state()
+    if not state or not state["entries"]:
+        raise AssertionError("radix export produced no pages")
+    warm = mk()
+    restored = warm.restore_radix_state(state)
+    if restored == 0:
+        raise AssertionError("radix restore adopted no pages")
+    t0 = time.perf_counter()
+    r_warm = warm.generate(prompts, grammar=g, shared_prefix=prefix,
+                           max_new_tokens=24)
+    wall_warm = time.perf_counter() - t0
+    if r_warm.texts != r_cold.texts:
+        raise AssertionError("radix-restored engine changed outputs")
+    if r_warm.stats.radix_hit_tokens == 0:
+        raise AssertionError("restored radix tree served no tokens")
+    if r_warm.stats.prefill_tokens >= r_cold.stats.prefill_tokens:
+        raise AssertionError("restored radix tree saved no prefill")
+    COUNTERS["radix_restored_pages"] = restored
+    COUNTERS["radix_warm_hit_tokens"] = r_warm.stats.radix_hit_tokens
+    for name, r, wall in (("radix_cold", r_cold, wall_cold),
+                          ("radix_warm", r_warm, wall_warm)):
+        rows_out.append((
+            f"resilience.{name}",
+            round(wall / max(1, n) * 1e6, 1),
+            f"prefill_tokens={r.stats.prefill_tokens};"
+            f"radix_hit_tokens={r.stats.radix_hit_tokens};"
+            f"wall_ms={wall * 1e3:.1f}"))
+
+
+def run(quick: bool = False):
+    COUNTERS.clear()
+    n = 48 if quick else 160
+    rows = []
+    _chaos(n, rows)
+    _outage(24 if quick else 80, rows)
+    _restart(n, rows)
+    _radix_restart(quick, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(",".join(str(x) for x in r))
+    print("#", COUNTERS)

@@ -36,6 +36,7 @@ MODULES = [
     ("cascade", "benchmarks.bench_cascade"),
     ("frontdoor", "benchmarks.bench_frontdoor"),
     ("rewrite", "benchmarks.bench_rewrite"),
+    ("resilience", "benchmarks.bench_resilience"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline"),
 ]
@@ -75,6 +76,7 @@ def main(argv=None) -> None:
                if not wanted or any(w in m[0] for w in wanted)]
     print("name,us_per_call,derived")
     results = {}
+    counters = {}
     failures = 0
     for label, modname in modules:
         t0 = time.time()
@@ -84,13 +86,17 @@ def main(argv=None) -> None:
             for name, us, derived in rows:
                 print(f"{name},{us},{derived}", flush=True)
                 results[name] = {"us_per_call": us, "derived": derived}
+            mod_counters = getattr(mod, "COUNTERS", None)
+            if mod_counters:
+                counters[label] = dict(mod_counters)
             print(f"# {label} done in {time.time()-t0:.1f}s", flush=True)
         except Exception as e:
             failures += 1
             print(f"{label}.ERROR,,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
     record = {"quick": quick, "git_sha": _git_sha(),
-              "failures": failures, "results": results}
+              "failures": failures, "results": results,
+              "counters": counters}
     if args.json:
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2, sort_keys=True)

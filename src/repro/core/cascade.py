@@ -42,6 +42,7 @@ import json
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.executors import CallResult, Predictor
+from repro.core.faults import TransientError
 from repro.core.predict import parse_structured, render_rows
 from repro.core.stats import (CascadeCalibration, StatisticsStore,
                               stats_key)
@@ -86,10 +87,18 @@ class CascadePredictor(Predictor):
                  store: Optional[StatisticsStore] = None,
                  key: Tuple[str, str] = ("", ""), proxy_model: str = "",
                  target_precision: float = 0.9, min_records: int = 8,
-                 audit_every: int = 16):
+                 audit_every: int = 16, breaker=None):
         self.proxy = proxy
         self.expensive = expensive
         self.store = store
+        # optional CircuitBreaker guarding the expensive backend (the
+        # database wires the service's per-model breaker in).  When it is
+        # open — or the expensive stage throws a TransientError — the
+        # escalation band falls back to the proxy's answers (graceful
+        # degradation) instead of failing the whole batch; passthrough
+        # prompts keep the raw proxy text and rely on the operator's
+        # parse-retry path once the backend recovers.
+        self.breaker = breaker
         self.key = key
         self.proxy_model = proxy_model or getattr(proxy, "name", "proxy")
         self.target_precision = float(target_precision)
@@ -214,10 +223,23 @@ class CascadePredictor(Predictor):
             exp_nrs.append(num_rows_list[pi])
             exp_rows.append(rows_list[pi])
         eres_list: List[CallResult] = []
+        degraded = False
         if exp_prompts:
-            eres_list = self.expensive.complete_many(
-                exp_prompts, schema, exp_nrs, shared_prefix=shared_prefix,
-                rows_list=exp_rows, instruction=instruction)
+            if self.breaker is not None and not self.breaker.allow():
+                degraded = True        # breaker open: proxy-only fallback
+            else:
+                try:
+                    eres_list = self.expensive.complete_many(
+                        exp_prompts, schema, exp_nrs,
+                        shared_prefix=shared_prefix, rows_list=exp_rows,
+                        instruction=instruction)
+                except TransientError:
+                    if self.breaker is not None:
+                        self.breaker.record_failure()
+                    degraded = True
+                else:
+                    if self.breaker is not None:
+                        self.breaker.record_success()
             if self.store is not None:
                 for er in eres_list:
                     # base key: the cost model's direct-route estimate
@@ -227,6 +249,8 @@ class CascadePredictor(Predictor):
 
         # ---- merge: splice expensive verdicts over proxy answers --------
         for gi, g in enumerate(esc_groups):
+            if gi >= len(eres_list):
+                break                  # degraded: keep the proxy answers
             eparsed = parse_structured(eres_list[gi].text, schema, len(g))
             for k, (pi, ri, row, _pre, conf, pos, rh, audited) in \
                     enumerate(g):
@@ -245,7 +269,16 @@ class CascadePredictor(Predictor):
         pt_results = dict(zip(passthrough, eres_list[len(esc_groups):]))
         for pi, (nr, pres) in enumerate(zip(num_rows_list, pres_list)):
             if parsed_list[pi] is None:
-                er = pt_results[pi]
+                er = pt_results.get(pi)
+                if er is None:
+                    # degraded passthrough: only the proxy's raw text is
+                    # available — the operator's parse/retry path decides
+                    # what survives
+                    merged.append(CallResult(
+                        pres.text, pres.in_tokens, pres.out_tokens,
+                        pres.sim_latency_s, pres.wall_s,
+                        confidences=pres.confidences))
+                    continue
                 merged.append(CallResult(
                     er.text, pres.in_tokens + er.in_tokens,
                     pres.out_tokens + er.out_tokens,
@@ -259,6 +292,8 @@ class CascadePredictor(Predictor):
                 pres.wall_s, confidences=confs_list[pi]))
         # escalation-group cost rides on the group's first contributor
         for gi, g in enumerate(esc_groups):
+            if gi >= len(eres_list):
+                break                  # degraded: no expensive cost to add
             er, m = eres_list[gi], merged[g[0][0]]
             m.in_tokens += er.in_tokens
             m.out_tokens += er.out_tokens
@@ -271,12 +306,15 @@ class CascadePredictor(Predictor):
             # whole-batch cascade accounting on the first result, like the
             # JAX engine counters (operators only ever sum these)
             merged[0].proxy_calls += len(prompts)
-            merged[0].escalated_calls += len(exp_prompts)
+            merged[0].escalated_calls += len(eres_list)
             merged[0].cascade_rows += routed
             merged[0].escalated_rows += len(esc)
+            if degraded:
+                merged[0].degraded_calls += len(exp_prompts)
         if self.store is not None:
             self.store.record_cascade_batch(
-                self.key, routed, len(esc), len(prompts), len(exp_prompts))
+                self.key, routed, len(esc), len(prompts), len(eres_list),
+                degraded=int(degraded))
         return merged
 
 
@@ -318,6 +356,11 @@ def cascade_section(plan, store: Optional[StatisticsStore],
                 observed = (f"rows={rec.escalated_rows}/{rec.routed_rows} "
                             f"proxy_calls={rec.proxy_calls} "
                             f"expensive_calls={rec.expensive_calls}")
+            if rec.degraded_batches > 0:
+                # proxy-only fallback fired (expensive backend down /
+                # breaker open): the contract is not currently enforced
+                status = "degraded"
+                observed += f" degraded_batches={rec.degraded_batches}"
         kind = type(node).__name__
         instr = key[1] if len(key[1]) <= 48 else key[1][:45] + "..."
         lines.append(

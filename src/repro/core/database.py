@@ -15,6 +15,7 @@ Executor resolution by model PATH scheme:
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import threading
 import time
 from typing import Callable, Dict, Iterator, List, Optional
@@ -46,7 +47,8 @@ class QueryResult:
 
 
 class IPDB:
-    def __init__(self, *, session_options: Optional[Dict[str, object]] = None):
+    def __init__(self, *, session_options: Optional[Dict[str, object]] = None,
+                 snapshot_dir: Optional[str] = None):
         self.catalog = Catalog()
         self.options: Dict[str, object] = {
             "batch_size": 16, "n_threads": 16, "use_batching": True,
@@ -84,6 +86,15 @@ class IPDB:
             # flag, in DEFAULT_FLAGS) turns routing off entirely.
             "cascade_target_precision": 0.9, "cascade_min_records": 8,
             "cascade_audit_every": 16,
+            # fault tolerance: per-dispatch-call timeout (0 = unbounded,
+            # the seed behavior), deterministic-jitter retry backoff for
+            # transient failures, per-backend circuit-breaker policy, and
+            # a session-default end-to-end deadline (0 = none; override
+            # per expression via WITH (deadline_ms=...)).  snapshot_keep
+            # bounds the on-disk warm-state snapshot history.
+            "call_timeout_s": 0.0, "retry_backoff_s": 0.0,
+            "breaker_threshold": 3, "breaker_probe_every": 4,
+            "deadline_ms": 0, "snapshot_keep": 3,
             **DEFAULT_FLAGS,
         }
         if session_options:
@@ -112,6 +123,62 @@ class IPDB:
         # and each stream gets a monotonically numbered session tag
         self._bind_lock = threading.Lock()
         self._stream_seq = 0
+        # crash-safe warm state: when snapshot_dir is set, opening the
+        # database restores the newest valid snapshot (prompt cache,
+        # statistics store, radix prefix-cache KV); corrupt or missing
+        # snapshots mean a cold start, never an error.  Radix payloads are
+        # restored lazily — engines are created on first use, so restored
+        # KV is staged per engine cache key until then.
+        self.snapshot_dir = snapshot_dir
+        self.restored_snapshot: Optional[str] = None
+        self.snapshot_skipped: List[str] = []
+        self._pending_radix: Dict[tuple, dict] = {}
+        if snapshot_dir:
+            self._restore_snapshot()
+
+    # -- warm-state snapshots --------------------------------------------
+    def save_snapshot(self) -> Optional[str]:
+        """Atomically write the database's warm state to `snapshot_dir`:
+        prompt-cache entries, statistics-store records, and the radix
+        prefix-cache KV pages of every live jax engine.  Returns the
+        snapshot path, or None when no snapshot_dir is configured."""
+        if not self.snapshot_dir:
+            return None
+        from repro.core.snapshot import write_snapshot
+        radix: Dict[tuple, dict] = {}
+        for key, eng in self._jax_engines.items():
+            state = eng.export_radix_state()
+            if state is not None and state.get("entries"):
+                radix[key] = state
+        payload = {
+            "prompt_cache": self.prompt_cache.export_state(),
+            "stats_store": self.stats_store.export_state(),
+            "radix": radix,
+        }
+        return write_snapshot(self.snapshot_dir, payload,
+                              keep=int(self.options.get("snapshot_keep", 3)))
+
+    def _restore_snapshot(self) -> None:
+        """Restore the newest valid snapshot; any failure (corrupt file,
+        schema drift) degrades to a cold start, never an error."""
+        from repro.core.snapshot import load_latest
+        payload, path, skipped = load_latest(self.snapshot_dir)
+        self.snapshot_skipped = skipped
+        if payload is None:
+            return
+        try:
+            self.prompt_cache.restore_state(payload.get("prompt_cache") or [])
+            self.stats_store.restore_state(payload.get("stats_store") or {})
+            self._pending_radix = dict(payload.get("radix") or {})
+            self.restored_snapshot = path
+        except Exception:
+            # a half-applied restore must not poison the session
+            self.prompt_cache = PromptCache()
+            self.stats_store.clear()
+            self._pending_radix = {}
+            self.restored_snapshot = None
+            if path:
+                self.snapshot_skipped.append(path)
 
     # -- lifecycle -------------------------------------------------------
     def close(self, *, cancel_pending: bool = False) -> None:
@@ -192,6 +259,16 @@ class IPDB:
                     kv_layout=layout, page_size=page_size,
                     page_pool_pages=pool, prefix_cache_mode=pmode,
                     kv_quant=quant)
+                # warm-state restore is lazy: adopt the snapshot's radix
+                # KV pages the moment the matching engine first exists.
+                # A payload that no longer fits (geometry drift) is simply
+                # dropped — a cold prefix cache, never a failed query.
+                pending = self._pending_radix.pop(key, None)
+                if pending:
+                    try:
+                        self._jax_engines[key].restore_radix_state(pending)
+                    except Exception:
+                        pass
             return JaxExecutor(self._jax_engines[key])
         if path.startswith("custom:"):
             name = path.split(":", 1)[1]
@@ -221,6 +298,21 @@ class IPDB:
                                service=self.inference_service,
                                stats_store=self.stats_store)
 
+    def _factory_with(self, extra: Dict[str, object]):
+        """Bind per-query extra options (deadline anchor, session tags)
+        into the operator factory.  Tests monkeypatch `_predict_factory`
+        with single-argument wrappers, so only pass `extra` when the
+        current factory accepts it — a one-arg factory just loses the
+        shared anchor and operators fall back to construction time."""
+        fn = self._predict_factory
+        try:
+            takes_extra = len(inspect.signature(fn).parameters) >= 2
+        except (TypeError, ValueError):
+            takes_extra = True
+        if takes_extra:
+            return lambda info: fn(info, extra)
+        return fn
+
     def _resolve_executor(self, entry: ModelEntry,
                           info: PredictInfo) -> Predictor:
         """Executor for one predict node: the entry's backend, wrapped in a
@@ -243,7 +335,13 @@ class IPDB:
                 target_precision=float(
                     merged.get("cascade_target_precision", 0.9)),
                 min_records=int(merged.get("cascade_min_records", 8)),
-                audit_every=int(merged.get("cascade_audit_every", 16)))
+                audit_every=int(merged.get("cascade_audit_every", 16)),
+                # the expensive stage gets its own breaker (distinct from
+                # the dispatch-level one keyed by the cascade's model
+                # name), so an expensive-backend outage degrades routed
+                # batches to proxy-only instead of failing them
+                breaker=self.inference_service.breaker_for(
+                    f"{entry.name}#expensive"))
         return self._make_executor(entry)
 
     # -- entry point -------------------------------------------------------
@@ -271,7 +369,8 @@ class IPDB:
     def stream(self, query: str, *, tenant: str = "",
                session: Optional[str] = None,
                cancel_scope: Optional[CancelScope] = None,
-               explain: bool = False) -> "QueryStream":
+               explain: bool = False,
+               deadline_ms: Optional[int] = None) -> "QueryStream":
         """Open one streaming query session: parse/bind/optimize now
         (serialized under a short lock), execute lazily — iterating
         `QueryStream.chunks()` drains the chunked physical pipeline and
@@ -297,13 +396,20 @@ class IPDB:
             svc.speculative = bool(self.options.get("speculative_flush",
                                                     True))
             svc.cost_model = CostModel(self.stats_store, self.options)
+            self._stamp_resilience(svc)
             pilot = self._make_pilot()
             opt = Optimizer(self.catalog, self.options,
                             stats=self.stats_store, pilot=pilot)
             plan = opt.optimize(plan)
-        extra = {"tenant": tenant, "session": tag}
-        factory = lambda info: self._predict_factory(info, extra)  # noqa: E731
-        ex = PlanExecutor(self.catalog, factory,
+        # deadline anchoring: operators derive their own deadline_ts from
+        # the precedence-resolved deadline_ms (session < OPTIONS < WITH)
+        # against this shared monotonic query start, so every expression
+        # in the query races the same wall deadline
+        extra: Dict[str, object] = {"tenant": tenant, "session": tag,
+                                    "query_start_ts": time.monotonic()}
+        if deadline_ms is not None:
+            extra["deadline_ms"] = int(deadline_ms)
+        ex = PlanExecutor(self.catalog, self._factory_with(extra),
                           chunk_size=int(self.options.get("chunk_size",
                                                           2048)),
                           stats_store=self.stats_store, cancel_scope=scope)
@@ -311,11 +417,25 @@ class IPDB:
                      + ex.physical_plan(plan) + "\n-- dispatch --\n"
                      + self._dispatch_repr() + "\n-- stats --\n"
                      + self._stats_repr(plan) + "\n-- cascade --\n"
-                     + self._cascade_repr(plan) + "\n-- rewrites --\n"
+                     + self._cascade_repr(plan) + "\n-- resilience --\n"
+                     + self._resilience_repr() + "\n-- rewrites --\n"
                      + rewrites_section(opt.rewrite_events)) \
             if explain else None
         return QueryStream(self, plan, ex, scope, tag, tenant, plan_text,
                            pilot, t0)
+
+    def _stamp_resilience(self, svc: InferenceService) -> None:
+        """Push the session's resilience options onto the service before a
+        query runs (mirrors the max_dispatch/speculative stamping)."""
+        svc.call_timeout_s = float(self.options.get("call_timeout_s", 0)
+                                   or 0)
+        svc.set_breaker_policy(
+            int(self.options.get("breaker_threshold", 3)),
+            int(self.options.get("breaker_probe_every", 4)))
+
+    def _resilience_repr(self) -> str:
+        from repro.core.faults import resilience_section
+        return resilience_section(self.inference_service, self.options)
 
     def _dispatch_repr(self) -> str:
         o = self.options
@@ -391,6 +511,7 @@ class IPDB:
                 + "\n-- dispatch --\n" + self._dispatch_repr()
                 + "\n-- stats --\n" + self._stats_repr(opt)
                 + "\n-- cascade --\n" + self._cascade_repr(opt)
+                + "\n-- resilience --\n" + self._resilience_repr()
                 + "\n-- rewrites --\n"
                 + rewrites_section(optimizer.rewrite_events))
 
@@ -405,11 +526,15 @@ class IPDB:
         # fresh cost model per query so SET option changes take effect;
         # drives the service's smallest-makespan-first flush ordering
         svc.cost_model = CostModel(self.stats_store, self.options)
+        self._stamp_resilience(svc)
         pilot = self._make_pilot()
         opt = Optimizer(self.catalog, self.options, stats=self.stats_store,
                         pilot=pilot)
         plan = opt.optimize(plan)
-        ex = PlanExecutor(self.catalog, self._predict_factory,
+        # one monotonic anchor per query: deadline_ms (from any precedence
+        # level) counts down from here in every operator
+        extra: Dict[str, object] = {"query_start_ts": time.monotonic()}
+        ex = PlanExecutor(self.catalog, self._factory_with(extra),
                           chunk_size=int(self.options.get("chunk_size", 2048)),
                           stats_store=self.stats_store)
         plan_text = (plan_repr(plan) + "\n-- physical --\n"
@@ -420,10 +545,12 @@ class IPDB:
         before = dataclasses.replace(svc.stats)
         table = ex.run(plan)
         if plan_text is not None:
-            # the rewrites section closes the report AFTER execution so it
-            # can include the mid-query re-ranks the stack operators made
-            plan_text += "\n-- rewrites --\n" + rewrites_section(
-                opt.rewrite_events, ex.rerank_log)
+            # the resilience + rewrites sections close the report AFTER
+            # execution so they can include what actually happened (retries
+            # taken, breakers tripped, mid-query re-ranks)
+            plan_text += ("\n-- resilience --\n" + self._resilience_repr()
+                          + "\n-- rewrites --\n" + rewrites_section(
+                              opt.rewrite_events, ex.rerank_log))
         st = ex.stats
         st.dispatch_batches = svc.stats.dispatch_batches \
             - before.dispatch_batches
@@ -432,6 +559,12 @@ class IPDB:
                                    if st.dispatch_batches else 0.0)
         st.inflight_dedup_hits = svc.stats.inflight_dedup_hits \
             - before.inflight_dedup_hits
+        # service-side resilience counters (operator-side retry/drop/
+        # degradation counts are already absorbed from the op stats)
+        st.backend_timeouts = svc.stats.backend_timeouts \
+            - before.backend_timeouts
+        st.breaker_rejections = svc.stats.breaker_rejections \
+            - before.breaker_rejections
         if pilot is not None and pilot.calls:
             # pilot work is part of the query's honest accounting: calls
             # are kept in their own counter, tokens/latency join the totals
@@ -523,6 +656,8 @@ class QueryStream:
                 if sess.dispatch_batches else 0.0)
             st.inflight_dedup_hits = sess.inflight_dedup_hits
             st.cancelled_requests = sess.cancelled_requests
+            st.backend_timeouts = sess.backend_timeouts
+            st.breaker_rejections = sess.breaker_rejections
         st.cancelled = self.cancelled
         if self._pilot is not None and self._pilot.calls:
             st.pilot_calls = self._pilot.calls

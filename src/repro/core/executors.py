@@ -54,6 +54,8 @@ class CallResult:
     escalated_calls: int = 0      # expensive-stage calls actually made
     cascade_rows: int = 0         # rows routed through the cascade
     escalated_rows: int = 0       # rows escalated to the expensive stage
+    degraded_calls: int = 0       # expensive-stage calls skipped because the
+                                  # backend was down (proxy-only degradation)
 
 
 class Predictor:

@@ -29,13 +29,16 @@ the same numbers the operator used to compute locally.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import re
 import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.cancel import QueryCancelled
 from repro.core.executors import CallResult, Predictor
+from repro.core.faults import DeadlineExceeded, TransientError
 from repro.core.service import (DispatchGroup, InferenceHandle,
                                 InferenceRequest, InferenceService, makespan)
 from repro.core.stats import stats_key
@@ -63,6 +66,16 @@ DEFAULTS = {
     # can account (and cancel) per session.  "" = plain Python API.
     "tenant": "",
     "session": "",
+    # resilience (core/faults.py).  deadline_ms: end-to-end query budget
+    # via the §5.3 precedence (expression WITH > model OPTIONS > session
+    # SET); 0 = none.  query_start_ts anchors it (the database stamps
+    # time.monotonic() at query start so every operator of one query
+    # derives the same absolute deadline).  retry_backoff_s: base of the
+    # exponential backoff between transient-failure retries (deterministic
+    # seeded jitter); 0 = retry immediately, the old behavior.
+    "deadline_ms": 0,
+    "query_start_ts": 0.0,
+    "retry_backoff_s": 0.0,
 }
 
 
@@ -92,6 +105,10 @@ class PredictStats:
     escalated_calls: int = 0       # expensive-stage calls actually made
     cascade_rows: int = 0          # rows routed through a cascade
     escalated_rows: int = 0        # rows escalated to the expensive stage
+    # resilience accounting (core/faults.py)
+    transient_retries: int = 0     # resubmits after transient backend errors
+    deadline_drops: int = 0        # calls/retries abandoned past the deadline
+    degraded_calls: int = 0        # cascade batches degraded to proxy-only
 
     def add(self, o: "PredictStats") -> None:
         for f in dataclasses.fields(self):
@@ -217,6 +234,19 @@ class PromptCache:
         with self._lock:
             self._d.clear()
 
+    # -- warm-state snapshots (core/snapshot.py) -----------------------
+    def export_state(self) -> List[Tuple[Tuple, List[Optional[object]]]]:
+        """(key, value) pairs in LRU order (oldest first), so a restore
+        that overflows max_entries keeps the hottest tail."""
+        with self._lock:
+            return list(self._d.items())
+
+    def restore_state(self, items) -> int:
+        """Re-insert snapshot entries (hit/miss counters untouched)."""
+        for k, v in items:
+            self.put(k, v)
+        return len(items)
+
 
 @dataclasses.dataclass
 class PendingBatch:
@@ -289,6 +319,15 @@ class PredictOperator:
         # service at dispatch; the operator records retries + fallbacks
         self.stats_store = stats_store
         self._skey = stats_key(info)
+        # absolute deadline on the time.monotonic() scale (0 = none):
+        # derived once here from the precedence-resolved deadline_ms and
+        # the query-start anchor, stamped on every request this operator
+        # submits, and re-checked before every retry attempt
+        dl_ms = float(opts.get("deadline_ms", 0) or 0)
+        self._deadline_ts = 0.0
+        if dl_ms > 0:
+            start = float(opts.get("query_start_ts", 0.0) or 0.0)
+            self._deadline_ts = (start or time.monotonic()) + dl_ms / 1000.0
 
     def _cache_put(self, k: Tuple, v: List[Optional[object]]) -> None:
         # total parse failures are memoized for the operator's lifetime
@@ -328,7 +367,8 @@ class PredictOperator:
             dedup=bool(self.opts.get("use_dedup", True)),
             stats_key=self._skey, stage=self._stage,
             tenant=str(self.opts.get("tenant", "") or ""),
-            session=str(self.opts.get("session", "") or ""))
+            session=str(self.opts.get("session", "") or ""),
+            deadline_ts=self._deadline_ts)
         handle, owned = self.service.submit_one(req)
         if not owned:
             self.stats.inflight_hits += 1
@@ -353,6 +393,68 @@ class PredictOperator:
         handle, owned = self._submit_call(prompt, nr, rows, instr,
                                           exact_rows=exact_rows)
         return self._consume(handle, owned, group)
+
+    # ------------------------------ resilience -----------------------------
+    def _session(self) -> str:
+        return str(self.opts.get("session", "") or "")
+
+    def _remaining(self) -> float:
+        """Seconds until the query deadline (+inf when none is set)."""
+        if not self._deadline_ts:
+            return float("inf")
+        return self._deadline_ts - time.monotonic()
+
+    def _backoff(self, attempt: int, prompt: str) -> None:
+        """Exponential backoff before retry `attempt` (1-based), with
+        deterministic jitter seeded from the prompt so replays sleep the
+        same schedule.  Capped at the remaining deadline; a zero base
+        (the default) retries immediately like the old bare loop."""
+        base = float(self.opts.get("retry_backoff_s", 0) or 0)
+        if base <= 0:
+            return
+        h = hashlib.sha256(f"backoff:{attempt}:{prompt}".encode()).digest()
+        jitter = 0.5 + h[0] / 512.0            # deterministic [0.5, 1.0)
+        delay = base * (2 ** (attempt - 1)) * jitter
+        rem = self._remaining()
+        if rem != float("inf"):
+            delay = min(delay, max(0.0, rem))
+        if delay > 0:
+            time.sleep(delay)
+
+    def _force_result(self, handle: InferenceHandle, owned: bool,
+                      group: DispatchGroup, *, prompt: str, nr: int,
+                      rows, instr: str, exact_rows: bool = False
+                      ) -> Optional[CallResult]:
+        """Force a handle, absorbing the fault model: transient backend
+        failures (injected faults, call timeouts, open breakers) are
+        retried with deterministic exponential backoff, re-checking the
+        remaining deadline before each attempt; an expired deadline or an
+        exhausted retry budget returns None and the caller degrades to
+        NULL outputs instead of crashing the query."""
+        retries = int(self.opts.get("retry_limit", 2))
+        attempt = 0
+        while True:
+            try:
+                return self._consume(handle, owned, group)
+            except QueryCancelled:
+                raise
+            except DeadlineExceeded:
+                # the service already counted the dispatch-side drop
+                self.stats.deadline_drops += 1
+                return None
+            except TransientError:
+                attempt += 1
+                if attempt > retries:
+                    return None
+                if self._remaining() <= 0:
+                    self.stats.deadline_drops += 1
+                    self.service.note_deadline_drop(self._session())
+                    return None
+                self.stats.transient_retries += 1
+                self.service.note_transient_retry(self._session())
+                self._backoff(attempt, prompt)
+                handle, owned = self._submit_call(prompt, nr, rows, instr,
+                                                  exact_rows=exact_rows)
 
     # ------------------------------ execution -------------------------------
     def __call__(self, table: Table) -> Table:
@@ -482,9 +584,12 @@ class PredictOperator:
         raw = self.info.prompt.instruction if self.info.prompt else ""
         # num_rows=0 is meaningful here: table generation lets the model
         # decide cardinality
-        res = self._call_now(prompt, 0, [], raw, group, exact_rows=True)
+        handle, owned = self._submit_call(prompt, 0, [], raw,
+                                          exact_rows=True)
+        res = self._force_result(handle, owned, group, prompt=prompt, nr=0,
+                                 rows=[], instr=raw, exact_rows=True)
         rows = []
-        v = extract_json(res.text)
+        v = None if res is None else extract_json(res.text)
         if v is not None:
             objs = v if isinstance(v, list) else [v]
             for o in objs[:max_rows]:
@@ -516,15 +621,27 @@ class PredictOperator:
         outs = []
         retries = int(self.opts.get("retry_limit", 2))
         for g, handle, owned in pend:
-            res = self._consume(handle, owned, group)
-            parsed = parse_structured(res.text, self.info.outputs, 1)
+            prompt = instr + "\n" + self._render_rows(g) + suffix
+            res = self._force_result(handle, owned, group, prompt=prompt,
+                                     nr=1, rows=g, instr=instr)
+            parsed = None if res is None else \
+                parse_structured(res.text, self.info.outputs, 1)
             attempt = 0
-            while parsed is None and attempt < retries:
+            while res is not None and parsed is None and attempt < retries:
+                if self._remaining() <= 0:
+                    # deadline re-check before each retry (see
+                    # _resolve_batch): expired groups degrade to NULL
+                    self.stats.deadline_drops += 1
+                    self.service.note_deadline_drop(self._session())
+                    break
                 attempt += 1
                 self._note_retry()
                 stricter = (instr + _STRICT + self._render_rows(g) + suffix)
-                res = self._call_now(stricter, 1, g, instr, group)
-                parsed = parse_structured(res.text, self.info.outputs, 1)
+                sh, sowned = self._submit_call(stricter, 1, g, instr)
+                res = self._force_result(sh, sowned, group, prompt=stricter,
+                                         nr=1, rows=g, instr=instr)
+                parsed = None if res is None else \
+                    parse_structured(res.text, self.info.outputs, 1)
             outs.append(parsed[0][self.info.outputs[0][0]] if parsed else None)
         self.stats.sim_latency_s += group.makespan()
         self.stats.serial_latency_s += group.serial()
@@ -536,17 +653,32 @@ class PredictOperator:
                        ) -> List[List[Optional[object]]]:
         """Parse one resolved batch (+strict retries, + per-tuple
         fallback). Returns per-row output value lists."""
-        res = self._consume(b.handle, b.owned, group)
         nr = len(b.rows)
         instr = self._instruction()
+        prompt = instr + "\n" + self._render_rows(b.rows)
+        res = self._force_result(b.handle, b.owned, group, prompt=prompt,
+                                 nr=nr, rows=b.rows, instr=instr)
+        if res is None:                 # deadline / retry budget exhausted
+            return [[None] * len(self.info.outputs) for _ in b.idxs]
         parsed = parse_structured(res.text, self.info.outputs, nr)
         retries = int(self.opts.get("retry_limit", 2))
         attempt = 0
         while parsed is None and attempt < retries:
+            if self._remaining() <= 0:
+                # re-check the deadline before every retry attempt: a
+                # nearly-expired chunk no longer burns the full
+                # retry_limit — it degrades to NULLs immediately
+                self.stats.deadline_drops += 1
+                self.service.note_deadline_drop(self._session())
+                return [[None] * len(self.info.outputs) for _ in b.idxs]
             attempt += 1
             self._note_retry()
             stricter = instr + _STRICT + self._render_rows(b.rows)
-            res = self._call_now(stricter, nr, b.rows, instr, group)
+            sh, sowned = self._submit_call(stricter, nr, b.rows, instr)
+            res = self._force_result(sh, sowned, group, prompt=stricter,
+                                     nr=nr, rows=b.rows, instr=instr)
+            if res is None:
+                return [[None] * len(self.info.outputs) for _ in b.idxs]
             parsed = parse_structured(res.text, self.info.outputs, nr)
 
         if parsed is None and nr > 1:
@@ -576,6 +708,7 @@ class PredictOperator:
         self.stats.escalated_calls += res.escalated_calls
         self.stats.cascade_rows += res.cascade_rows
         self.stats.escalated_rows += res.escalated_rows
+        self.stats.degraded_calls += res.degraded_calls
 
     def _note_retry(self) -> None:
         self.stats.retries += 1

@@ -60,11 +60,15 @@ import dataclasses
 import heapq
 import os
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cancel import QueryCancelled
 from repro.core.executors import CallResult, Predictor, default_latency_model
+from repro.core.faults import (CLOSED, BackendTimeout, CircuitBreaker,
+                               CircuitOpenError, DeadlineExceeded,
+                               TransientError)
 
 
 def makespan(latencies: Sequence[float], workers: int, rpm: float = 0.0
@@ -151,6 +155,14 @@ class InferenceRequest:
     # queued backlog without touching another session's handles.
     tenant: str = ""
     session: str = ""
+    # absolute end-to-end deadline on the time.monotonic() scale (0 = no
+    # deadline).  Set once per query from `deadline_ms` (§5.3 option
+    # precedence / front-door request body) and shared by every request
+    # of the query, so it needs no place in queue_key: batches are
+    # session-pure and a session runs one query at a time.  Expired
+    # requests are dropped at dispatch with `DeadlineExceeded` instead of
+    # being sent to the backend.
+    deadline_ts: float = 0.0
 
     @property
     def queue_key(self) -> Tuple:
@@ -212,6 +224,10 @@ class SessionCounters:
     dispatch_batches: int = 0
     inflight_dedup_hits: int = 0
     cancelled_requests: int = 0        # queued handles dropped by a cancel
+    transient_retries: int = 0         # operator retries after TransientError
+    deadline_drops: int = 0            # requests dropped past their deadline
+    backend_timeouts: int = 0          # dispatch batches killed by call timeout
+    breaker_rejections: int = 0        # requests shed by an open breaker
 
 
 @dataclasses.dataclass
@@ -224,6 +240,13 @@ class ServiceStats:
     # sync/async split is an execution detail, batch composition is not)
     async_batches: int = 0             # batches run on a worker thread
     speculative_batches: int = 0       # batches started by kick()
+    # resilience accounting (see core/faults.py): surfaced per-query in
+    # ExecStats and globally in EXPLAIN's -- resilience -- section
+    transient_retries: int = 0         # operator retries after TransientError
+    deadline_drops: int = 0            # requests dropped past their deadline
+    backend_timeouts: int = 0          # dispatch batches killed by call timeout
+    breaker_rejections: int = 0        # requests shed by an open breaker
+    degraded_calls: int = 0            # cascade batches degraded to proxy-only
 
     @property
     def mean_batch_occupancy(self) -> float:
@@ -280,6 +303,18 @@ class InferenceService:
         self.max_dispatch = int(max_dispatch)   # 0 = unbounded batch
         self.speculative = bool(speculative)
         self.stats = ServiceStats()
+        # resilience policy (database stamps these from the §5.3 option
+        # precedence before each query).  call_timeout_s = 0 keeps the
+        # exact old unbounded-call behavior; breakers only ever act after
+        # transient failures, so a healthy backend never notices them.
+        self.call_timeout_s = 0.0
+        self.breaker_threshold = 3
+        self.breaker_probe_every = 4
+        # per-backend breakers keyed by model name — stable across the
+        # per-operator executor instances and across queries (the service
+        # is database-owned), which is what lets a tripped breaker shed
+        # load for every later query until a probe succeeds
+        self._breakers: Dict[str, CircuitBreaker] = {}
         # front-door accounting: per-session dispatch counters and
         # per-tenant dispatched-call totals (fairness-ratio reporting),
         # plus the tombstone set of cancelled sessions (submits from a
@@ -604,24 +639,160 @@ class InferenceService:
                 if self._outstanding == 0:
                     self._idle.notify_all()
 
+    # -- resilience ------------------------------------------------------
+    def breaker_for(self, model_name: str) -> CircuitBreaker:
+        """The (lazily created) circuit breaker guarding one backend."""
+        with self._lock:
+            b = self._breakers.get(model_name)
+            if b is None:
+                b = self._breakers[model_name] = CircuitBreaker(
+                    model_name, failure_threshold=self.breaker_threshold,
+                    probe_every=self.breaker_probe_every)
+            return b
+
+    def set_breaker_policy(self, threshold: int, probe_every: int) -> None:
+        """Apply a (possibly changed) breaker policy to future AND already
+        existing breakers — SET breaker_threshold must not be ignored just
+        because a backend already saw traffic."""
+        with self._lock:
+            self.breaker_threshold = max(1, int(threshold))
+            self.breaker_probe_every = max(1, int(probe_every))
+            for b in self._breakers.values():
+                b.failure_threshold = self.breaker_threshold
+                b.probe_every = self.breaker_probe_every
+
+    def breaker_open(self, model_name: str = "") -> bool:
+        """True when the named breaker (or, with "", any breaker) is not
+        closed — the front door's 503 admission signal."""
+        with self._lock:
+            if model_name:
+                b = self._breakers.get(model_name)
+                return b is not None and b.state != CLOSED
+            return any(b.state != CLOSED for b in self._breakers.values())
+
+    def breaker_snapshots(self) -> Dict[str, Dict[str, object]]:
+        """Counters for every breaker that has seen a failure/rejection
+        (EXPLAIN's -- resilience -- section; quiet breakers are elided)."""
+        with self._lock:
+            brs = list(self._breakers.items())
+        return {name: b.snapshot() for name, b in brs
+                if b.failures or b.rejections or b.state != CLOSED}
+
+    def note_transient_retry(self, session: str = "", n: int = 1) -> None:
+        """Operator hook: a resolve path re-submitted after a transient
+        failure (counted here so the resilience section and per-session
+        ExecStats see retries the executors never know about)."""
+        with self._lock:
+            self.stats.transient_retries += n
+            sess = self._session_counters(session)
+            if sess is not None:
+                sess.transient_retries += n
+
+    def note_deadline_drop(self, session: str = "", n: int = 1) -> None:
+        """Operator hook: work abandoned because the deadline expired
+        before it could even be submitted/retried."""
+        with self._lock:
+            self.stats.deadline_drops += n
+            sess = self._session_counters(session)
+            if sess is not None:
+                sess.deadline_drops += n
+
+    def _fail_batch(self, handles: List[InferenceHandle],
+                    err: BaseException) -> None:
+        with self._lock:
+            for h in handles:
+                h._error = err
+                if h._event is not None:
+                    h._event.set()
+
+    def _call_executor(self, executor: Predictor,
+                       reqs: List[InferenceRequest]) -> List[CallResult]:
+        """One `complete_many` call, bounded by `call_timeout_s` when set.
+
+        The bounded path runs the call on a daemon guard thread and joins
+        it with the timeout: a hung backend strands only that zombie
+        thread (its late result is discarded), while the lane worker
+        returns `BackendTimeout` — so a wedged executor can no longer pin
+        its lane, `drain()`, or `shutdown()` forever.  0 disables the
+        guard and is byte-for-byte the old direct call."""
+        args = ([r.prompt for r in reqs], list(reqs[0].schema),
+                [r.num_rows for r in reqs])
+        kwargs = dict(shared_prefix=reqs[0].shared_prefix,
+                      rows_list=[r.rows for r in reqs],
+                      instruction=reqs[0].instruction)
+        timeout = float(self.call_timeout_s or 0.0)
+        if timeout <= 0.0:
+            return executor.complete_many(*args, **kwargs)
+        box: Dict[str, object] = {}
+        done = threading.Event()
+
+        def _guard():
+            try:
+                box["res"] = executor.complete_many(*args, **kwargs)
+            except BaseException as e:
+                box["err"] = e
+            finally:
+                done.set()
+
+        threading.Thread(target=_guard, daemon=True,
+                         name="ipdb-call-guard").start()
+        if not done.wait(timeout):
+            raise BackendTimeout(
+                f"{reqs[0].model_name}: dispatch batch of {len(reqs)} "
+                f"exceeded call_timeout_s={timeout:g}; result discarded")
+        if "err" in box:
+            raise box["err"]  # type: ignore[misc]
+        return box["res"]  # type: ignore[return-value]
+
     def _dispatch(self, handles: List[InferenceHandle],
                   background: bool = False) -> None:
         reqs = [h.request for h in handles]
         executor = reqs[0].executor
-        try:
-            results = executor.complete_many(
-                [r.prompt for r in reqs], list(reqs[0].schema),
-                [r.num_rows for r in reqs],
-                shared_prefix=reqs[0].shared_prefix,
-                rows_list=[r.rows for r in reqs],
-                instruction=reqs[0].instruction)
-        except BaseException as e:
+        # deadline propagation: expired work is dropped, not dispatched.
+        # The whole batch shares one query's deadline (batches are
+        # session-pure and deadline_ts is stamped once per query).
+        dl = reqs[0].deadline_ts
+        if dl and time.monotonic() >= dl:
             with self._lock:
-                for h in handles:
-                    h._error = e
-                    if h._event is not None:
-                        h._event.set()
+                self.stats.deadline_drops += len(reqs)
+                sess = self._session_counters(reqs[0].session)
+                if sess is not None:
+                    sess.deadline_drops += len(reqs)
+            self._fail_batch(handles, DeadlineExceeded(
+                f"deadline expired before dispatch "
+                f"({len(reqs)} requests dropped)"))
+            return
+        breaker = self.breaker_for(reqs[0].model_name)
+        if not breaker.allow():
+            with self._lock:
+                self.stats.breaker_rejections += len(reqs)
+                sess = self._session_counters(reqs[0].session)
+                if sess is not None:
+                    sess.breaker_rejections += len(reqs)
+            self._fail_batch(handles, CircuitOpenError(
+                f"circuit open for backend {reqs[0].model_name!r}"))
+            return
+        try:
+            results = self._call_executor(executor, reqs)
+        except BaseException as e:
+            if isinstance(e, BackendTimeout):
+                with self._lock:
+                    self.stats.backend_timeouts += 1
+                    sess = self._session_counters(reqs[0].session)
+                    if sess is not None:
+                        sess.backend_timeouts += 1
+            self._fail_batch(handles, e)
+            # transient-class failures feed the breaker and are recorded
+            # on the handles only — retry policy belongs to the resolving
+            # operator, and one backend's hiccup must not propagate out of
+            # flush()/drain_for() into an unrelated operator's resolve.
+            # Non-transient errors bypass the breaker (they indicate a
+            # caller bug, not backend health) and re-raise like before.
+            if isinstance(e, TransientError):
+                breaker.record_failure()
+                return
             raise
+        breaker.record_success()
         with self._lock:
             self.stats.dispatch_batches += 1
             self.stats.dispatched_calls += len(reqs)
@@ -639,6 +810,12 @@ class InferenceService:
                 h._result = res
                 if h._event is not None:
                     h._event.set()
+                # cascade batches degraded to proxy-only stamp the count
+                # on their first merged CallResult (like the other
+                # whole-batch cascade counters)
+                dc = getattr(res, "degraded_calls", 0)
+                if dc:
+                    self.stats.degraded_calls += dc
         if self.stats_store is not None:
             for h, res in zip(handles, results):
                 if h.request.stats_key:

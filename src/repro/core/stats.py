@@ -151,7 +151,7 @@ class CascadeStats:
     """
     __slots__ = ("reservoir", "_heap", "hist_pos", "hist_neg", "routed_rows",
                  "escalated_rows", "proxy_calls", "expensive_calls",
-                 "audited", "audit_agree")
+                 "audited", "audit_agree", "degraded_batches")
 
     def __init__(self):
         self.reservoir: Dict[int, Tuple[float, bool, bool]] = {}
@@ -168,6 +168,9 @@ class CascadeStats:
         self.expensive_calls = 0
         self.audited = 0
         self.audit_agree = 0
+        # batches whose expensive stage was skipped (breaker open /
+        # transient outage): EXPLAIN surfaces contract status `degraded`
+        self.degraded_batches = 0
 
     @property
     def n_records(self) -> int:
@@ -251,6 +254,63 @@ class StatisticsStore:
             self._d.clear()
             self._c.clear()
 
+    # -- warm-state snapshots (core/snapshot.py) -------------------------
+    _PRED_FIELDS = ("rows_in", "rows_passed", "calls", "in_tokens",
+                    "out_tokens", "latency_s", "retries", "fallbacks",
+                    "pilot_calls", "pilot_rows")
+    _CASC_FIELDS = ("routed_rows", "escalated_rows", "proxy_calls",
+                    "expensive_calls", "audited", "audit_agree",
+                    "degraded_batches")
+
+    def export_state(self) -> Dict[str, object]:
+        """Plain-python snapshot payload: every predicate record (with its
+        recency window) and every cascade record (reservoir + sketches).
+        numpy arrays become lists and the eviction heap is dropped — both
+        are rebuilt on restore — so the payload pickles small and stays
+        stable across numpy versions."""
+        with self._lock:
+            preds = {}
+            for key, rec in self._d.items():
+                d = {f: getattr(rec, f) for f in self._PRED_FIELDS}
+                d["recent"] = list(rec.recent)
+                preds[key] = d
+            cascades = {}
+            for key, rec in self._c.items():
+                d = {f: getattr(rec, f) for f in self._CASC_FIELDS}
+                d["reservoir"] = dict(rec.reservoir)
+                d["hist_pos"] = rec.hist_pos.tolist()
+                d["hist_neg"] = rec.hist_neg.tolist()
+                cascades[key] = d
+        return {"predicates": preds, "cascades": cascades}
+
+    def restore_state(self, state: Dict[str, object]) -> int:
+        """Rebuild records from an `export_state` payload (additive onto
+        whatever the store already holds; fresh stores restore exactly)."""
+        n = 0
+        for key, d in (state.get("predicates") or {}).items():
+            rec = self.entry(tuple(key))
+            with self._lock:
+                for f in self._PRED_FIELDS:
+                    setattr(rec, f, d.get(f, 0))
+                rec.recent = deque((tuple(t) for t in d.get("recent", [])),
+                                   maxlen=_RECENT_WINDOW)
+            n += 1
+        for key, d in (state.get("cascades") or {}).items():
+            rec = self.cascade_entry(tuple(key))
+            with self._lock:
+                for f in self._CASC_FIELDS:
+                    setattr(rec, f, d.get(f, 0))
+                rec.reservoir = {int(h): tuple(v)
+                                 for h, v in d.get("reservoir", {}).items()}
+                rec._heap = [-h for h in rec.reservoir]
+                heapq.heapify(rec._heap)
+                rec.hist_pos = np.asarray(
+                    d.get("hist_pos", [0] * _CASCADE_BINS), np.int64)
+                rec.hist_neg = np.asarray(
+                    d.get("hist_neg", [0] * _CASCADE_BINS), np.int64)
+            n += 1
+        return n
+
     # -- writers ---------------------------------------------------------
     def record_call(self, key, in_tokens: int, out_tokens: int,
                     latency_s: float, *, pilot: bool = False) -> None:
@@ -325,13 +385,15 @@ class StatisticsStore:
             # exactly as insert-then-trim discarded it
 
     def record_cascade_batch(self, key, rows: int, escalated: int,
-                             proxy_calls: int, expensive_calls: int) -> None:
+                             proxy_calls: int, expensive_calls: int, *,
+                             degraded: int = 0) -> None:
         rec = self.cascade_entry(key)
         with self._lock:
             rec.routed_rows += int(rows)
             rec.escalated_rows += int(escalated)
             rec.proxy_calls += int(proxy_calls)
             rec.expensive_calls += int(expensive_calls)
+            rec.degraded_batches += int(degraded)
 
     # -- cascade calibration ----------------------------------------------
     def calibrate_cascade(self, key, target_precision: float, *,

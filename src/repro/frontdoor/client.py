@@ -101,11 +101,16 @@ class FrontDoorClient:
 
     # ------------------------------------------------------------------
     def query(self, sql: str, *, tenant: str = "",
-              explain: bool = False) -> QueryHandle:
+              explain: bool = False,
+              deadline_ms: Optional[int] = None) -> QueryHandle:
         """POST /query; returns once the hello frame arrives.  Raises
-        `QueryRejected` on 429 (admission) or any other error status."""
-        body = json.dumps({"sql": sql, "tenant": tenant,
-                           "explain": explain}).encode()
+        `QueryRejected` on 429 (admission), 503 (breaker open — check
+        the Retry-After hint in the payload), or any other error."""
+        spec: Dict[str, object] = {"sql": sql, "tenant": tenant,
+                                   "explain": explain}
+        if deadline_ms is not None:
+            spec["deadline_ms"] = int(deadline_ms)
+        body = json.dumps(spec).encode()
         sock = socket.create_connection((self.host, self.port),
                                         timeout=self.timeout)
         sock.sendall(self._request("POST", "/query", body))

@@ -45,12 +45,22 @@ class FrontDoor:
     def __init__(self, db, *, host: str = "127.0.0.1", port: int = 0,
                  max_sessions: int = 4, max_queued: int = 8,
                  gate=None, tenant_weights: Optional[Dict[str, float]] = None,
-                 gate_slots: Optional[int] = None):
+                 gate_slots: Optional[int] = None,
+                 snapshot_every_s: float = 0.0, retry_after_s: int = 1):
         self.db = db
         self.host = host
         self.port = port                    # 0 → ephemeral, set by start()
         self.max_sessions = max(1, int(max_sessions))
         self.max_queued = max(0, int(max_queued))
+        # graceful degradation: while any backend breaker is open, new
+        # queries are shed with 503 + Retry-After instead of queueing work
+        # that would only feed the outage
+        self.retry_after_s = max(1, int(retry_after_s))
+        # crash safety: with the db configured for snapshots, persist its
+        # warm state every snapshot_every_s seconds (and once at stop())
+        self.snapshot_every_s = float(snapshot_every_s)
+        self._snap_stop = threading.Event()
+        self._snap_thread: Optional[threading.Thread] = None
         self.gate = gate if gate is not None else DeficitRoundRobin(
             gate_slots if gate_slots is not None else self.max_sessions,
             weights=tenant_weights)
@@ -77,11 +87,37 @@ class FrontDoor:
         self._thread.start()
         if not self._started.wait(timeout=10):
             raise RuntimeError("front door failed to start")
+        if self.snapshot_every_s > 0 and getattr(self.db, "snapshot_dir",
+                                                 None):
+            self._snap_stop.clear()
+            self._snap_thread = threading.Thread(
+                target=self._snapshot_loop, name="frontdoor-snapshot",
+                daemon=True)
+            self._snap_thread.start()
         return self.host, self.port
+
+    def _snapshot_loop(self) -> None:
+        while not self._snap_stop.wait(self.snapshot_every_s):
+            self._snapshot_once()
+
+    def _snapshot_once(self) -> None:
+        try:
+            if self.db.save_snapshot() is not None:
+                self.counters["snapshots"] += 1
+        except Exception:
+            # a failed snapshot (disk full, race with shutdown) must
+            # never take the serving path down
+            self.counters["snapshot_failures"] += 1
 
     def stop(self) -> None:
         """Cancel live sessions, close the listener, join the loop thread
         and the worker pool (idempotent)."""
+        if self._snap_thread is not None:
+            self._snap_stop.set()
+            self._snap_thread.join(timeout=10)
+            self._snap_thread = None
+            self._snapshot_once()           # parting snapshot: warm state
+            # survives a clean shutdown as well as a crash
         with self._lock:
             sessions = list(self._sessions.values())
         for s in sessions:
@@ -173,15 +209,17 @@ class FrontDoor:
         return method, path, body
 
     def _write_json(self, writer: asyncio.StreamWriter, status: int,
-                    obj: dict) -> None:
+                    obj: dict, *, headers: Optional[Dict[str, str]] = None
+                    ) -> None:
         payload = json.dumps(obj).encode()
         reason = {200: "OK", 404: "Not Found",
-                  429: "Too Many Requests", 400: "Bad Request"}.get(
-                      status, "OK")
+                  429: "Too Many Requests", 400: "Bad Request",
+                  503: "Service Unavailable"}.get(status, "OK")
+        extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
         writer.write(
             "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\n"
-            "Content-Length: {}\r\nConnection: close\r\n\r\n".format(
-                status, reason, len(payload)).encode() + payload)
+            "Content-Length: {}\r\n{}Connection: close\r\n\r\n".format(
+                status, reason, len(payload), extra).encode() + payload)
 
     # -- routes ----------------------------------------------------------
     async def _route_query(self, reader, writer, body: bytes) -> None:
@@ -192,6 +230,18 @@ class FrontDoor:
             self._write_json(writer, 400, {"error": "bad request body"})
             return
         tenant = str(spec.get("tenant", ""))
+        deadline_ms = spec.get("deadline_ms")
+        # breaker-open shed BEFORE admission: while a backend is tripped,
+        # accepted queries would mostly burn their deadline against
+        # CircuitOpenError, so tell clients when to come back instead
+        svc = getattr(self.db, "inference_service", None)
+        if svc is not None and svc.breaker_open():
+            self.counters["rejected_breaker"] += 1
+            self._write_json(
+                writer, 503, {"error": "backend circuit open",
+                              "retry_after_s": self.retry_after_s},
+                headers={"Retry-After": str(self.retry_after_s)})
+            return
         with self._lock:
             if (self._active >= self.max_sessions
                     and self._queued >= self.max_queued):
@@ -204,7 +254,9 @@ class FrontDoor:
             sid = f"fd{self._seq}"
             session = QuerySession(
                 self.db, sql, tenant=tenant, session_id=sid,
-                gate=self.gate, explain=bool(spec.get("explain", False)))
+                gate=self.gate, explain=bool(spec.get("explain", False)),
+                deadline_ms=None if deadline_ms is None
+                else int(deadline_ms))
             self._sessions[sid] = session
             self._queued += 1
             self.counters["accepted"] += 1

@@ -40,13 +40,15 @@ def stats_frame_dict(stats) -> dict:
 
 class QuerySession:
     def __init__(self, db, sql: str, *, tenant: str = "",
-                 session_id: str, gate, explain: bool = False):
+                 session_id: str, gate, explain: bool = False,
+                 deadline_ms: Optional[int] = None):
         self.db = db
         self.sql = sql
         self.tenant = tenant
         self.id = session_id
         self.gate = gate
         self.explain = explain
+        self.deadline_ms = deadline_ms
         self.scope = CancelScope()
         self.status = "queued"          # queued|running|ok|cancelled|error
         self.rows_emitted = 0
@@ -70,7 +72,8 @@ class QuerySession:
             stream = self.db.stream(self.sql, tenant=self.tenant,
                                     session=self.id,
                                     cancel_scope=self.scope,
-                                    explain=self.explain)
+                                    explain=self.explain,
+                                    deadline_ms=self.deadline_ms)
         except QueryCancelled:
             self._trail(emit, "cancelled", None)
             return

@@ -60,6 +60,14 @@ class ExecStats:
     # mid-query re-optimization: times a SemanticSelectStackOp re-ranked
     # its remaining units on observed chunk selectivities
     reranks: int = 0
+    # resilience accounting: operator-side retry/drop/degradation counts
+    # come from the predict operators via _absorb; timeout/breaker shed
+    # counts are service-side and filled per-query by IPDB
+    transient_retries: int = 0      # resubmits after a TransientError
+    deadline_drops: int = 0         # batches/retries dropped past deadline
+    degraded_calls: int = 0         # cascade calls served proxy-only
+    backend_timeouts: int = 0       # dispatch batches killed by call timeout
+    breaker_rejections: int = 0     # requests shed by an open breaker
 
     @property
     def tokens(self) -> int:
@@ -140,6 +148,9 @@ class PlanExecutor:
         self.stats.escalated_calls += s.escalated_calls
         self.stats.cascade_rows += s.cascade_rows
         self.stats.escalated_rows += s.escalated_rows
+        self.stats.transient_retries += s.transient_retries
+        self.stats.deadline_drops += s.deadline_drops
+        self.stats.degraded_calls += s.degraded_calls
 
     def _note_reranks(self, count: int, lines) -> None:
         """Called once per SemanticSelectStackOp when it closes."""

